@@ -1,0 +1,63 @@
+"""Micro-benchmarks of the MoE hot path on this host (CPU): gating,
+dispatch (sort vs einsum), expert FFN (einsum vs Pallas-interpret), and a
+full layer step.  Wall times are CPU-only and NOT the TPU numbers (those
+come from §Roofline); `derived` carries the arithmetic each call performs
+so the CSV is meaningful across hosts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.common import param as pm
+from repro.core import dispatch as dsp
+from repro.core import gating
+from repro.core.moe import MoEArgs, moe_apply, moe_defs
+
+T, D, E, K, FF = 4096, 64, 32, 4, 128
+
+
+def run():
+    a = MoEArgs(n_experts=E, k=K, d_model=D, d_ff=FF, dtype=jnp.float32,
+                capacity_factor=2.0)
+    params = pm.materialize(moe_defs(a), jax.random.PRNGKey(0))
+    params["gate"]["wg"] = 0.3 * jax.random.normal(jax.random.PRNGKey(1),
+                                                   (D, E))
+    x = jax.random.normal(jax.random.PRNGKey(2), (T, D))
+
+    g = jax.jit(lambda p, x: gating.noisy_topk_gating(
+        p, x, K, train=False))
+    us = time_call(g, params["gate"], x)
+    emit("micro_noisy_topk_gating", us, f"T={T} E={E} k={K}")
+
+    info = g(params["gate"], x)
+    cap = dsp.capacity_for(T, E, K, 2.0)
+    plan = jax.jit(lambda i, w: dsp.plan(i, w, E, cap))
+    us = time_call(plan, info.expert_index, info.combine_weights)
+    emit("micro_dispatch_plan_sort", us, f"T*k={T*K} assignments")
+
+    p = plan(info.expert_index, info.combine_weights)
+    # plan carries static ints: close over it rather than passing through jit
+    d_sort = jax.jit(lambda x: dsp.dispatch(x, p))
+    us = time_call(d_sort, x)
+    emit("micro_dispatch_scatter", us, f"[{T},{D}]->[{E},{cap},{D}]")
+    d_ein = jax.jit(lambda x: dsp.dispatch_einsum(x, p))
+    us = time_call(d_ein, x)
+    emit("micro_dispatch_einsum", us, f"one-hot [{T},{E},{cap}]")
+
+    buf = d_sort(x)
+    from repro.core.moe import expert_ffn
+    f_ein = jax.jit(lambda pr, b: expert_ffn(pr, b, a))
+    us = time_call(f_ein, params, buf)
+    flops = 2 * E * cap * D * FF * 2
+    emit("micro_expert_ffn_einsum", us,
+         f"GFLOP={flops/1e9:.2f} (xla)")
+
+    full = jax.jit(lambda pr, x: moe_apply(pr, x, a, train=False)[0])
+    us = time_call(full, params, x)
+    emit("micro_moe_layer_full", us, f"T={T} E={E} k={K} cap={cap}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+
+  table7_ops        -> Table 7 (and Table 1): ops/timestep + params vs the
+                       paper's published accounting (hard-asserted <12% err)
+  table2_mt_ops     -> Tables 2-4 cost columns (85M vs 214M ops/timestep)
+  table6_balance    -> Table 6: w_importance/w_load ablation (CV + max/mean)
+  fig2_capacity     -> Figure 2-left: perplexity vs capacity, matched ops
+  microbench        -> host-side hot-path microbenchmarks
+  (Figure 3 is Figure 2 at 100B words; Table 5 needs the 12-pair corpus —
+   both noted in EXPERIMENTS.md §Skips.  TPU-side numbers live in
+   EXPERIMENTS.md §Roofline, produced by repro.launch.dryrun.)
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (fig2_capacity, microbench, table2_mt_ops,
+                            table6_balance, table7_ops)
+    t0 = time.time()
+    table7_ops.run()
+    table2_mt_ops.run()
+    microbench.run()
+    table6_balance.run()
+    fig2_capacity.run()
+    print(f"benchmarks_total,{(time.time()-t0)*1e6:.0f},wall")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Tables 1/7 (and 2-4's ops column): ops/timestep + parameter accounting
+for the paper's exact configurations, validated against the paper's own
+published numbers.
+
+ops/timestep = multiply-adds per token in the forward pass, excluding the
+softmax layer (the paper's §5.1 metric).  For the paper's LM:
+  2 LSTM-512 layers       ~= 2 * 4 * (512*512 + 512*512)  ~= 4.2M
+  MoE (k active, h=1024)  ~= k * (512*1024 + 1024*512)    ~= 4 * 1M
+totalling the paper's ~8.4M for MoE-4..256.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.moe_paper import paper_config
+
+# (config, paper ops/timestep (M), paper #params excl embed/softmax (M))
+PAPER_TABLE7 = [
+    ("lstm-2048-512", 9.4, 9.4),
+    ("4xlstm-512", 8.4, 8.4),
+    ("moe-1-wide", 8.4, 8.4),
+    ("moe-1-deep", 8.4, 8.4),
+    ("moe-4", 8.4, 8.4),
+    ("moe-32", 8.4, 37.8),
+    ("moe-256", 8.6, 272.9),
+    ("moe-256-h", 8.4, 272.9),
+    ("moe-1024-h", 8.5, 1079.0),
+    ("moe-4096-h", 8.9, 4303.4),
+]
+
+
+def lstm_madds(d_in, d_hidden, d_proj=None):
+    rec = d_proj or d_hidden
+    m = d_in * 4 * d_hidden + rec * 4 * d_hidden
+    if d_proj:
+        m += d_hidden * d_proj
+    return m
+
+
+def paper_ops_and_params(name: str) -> tuple[float, float]:
+    """(ops/timestep, params excl embed+softmax), in raw counts."""
+    cfg = paper_config(name)
+    d = cfg.d_model
+    if cfg.variant == "lstm_2048_512":
+        ops = lstm_madds(d, 2048, d)
+        return ops, ops
+    ops = 2 * lstm_madds(d, d)                      # the two LSTM layers
+    par = float(ops)
+    if cfg.variant == "lstm_4x":
+        ops += 2 * lstm_madds(d, d)
+        par += 2 * lstm_madds(d, d)
+    elif cfg.variant == "moe_1_wide":
+        ops += d * 4096 + 4096 * d
+        par += d * 4096 + 4096 * d
+    elif cfg.variant == "moe_1_deep":
+        ops += d * 1024 + 3 * 1024 * 1024 + 1024 * d
+        par += d * 1024 + 3 * 1024 * 1024 + 1024 * d
+    else:
+        per_expert = d * cfg.expert_hidden + cfg.expert_hidden * d
+        k_active = 4 if not cfg.hierarchical else 4   # k=4 flat; 2x2 hier.
+        ops += k_active * per_expert
+        par += cfg.n_experts * per_expert
+        # gating
+        ops += d * cfg.n_experts if not cfg.hierarchical else \
+            d * (cfg.hierarchical[0] + cfg.hierarchical[1])
+    return float(ops), float(par)
+
+
+def run():
+    worst = 0.0
+    for name, paper_ops, paper_params in PAPER_TABLE7:
+        ops, par = paper_ops_and_params(name)
+        rel_ops = abs(ops / 1e6 - paper_ops) / paper_ops
+        rel_par = abs(par / 1e6 - paper_params) / paper_params
+        worst = max(worst, rel_ops, rel_par)
+        emit(f"table7_{name}", 0.0,
+             f"ops/ts={ops/1e6:.2f}M (paper {paper_ops}M) "
+             f"params={par/1e6:.1f}M (paper {paper_params}M) "
+             f"err_ops={rel_ops:.1%} err_params={rel_par:.1%}")
+    assert worst < 0.12, f"accounting diverges from paper: {worst:.1%}"
+
+
+if __name__ == "__main__":
+    run()

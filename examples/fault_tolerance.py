@@ -1,0 +1,46 @@
+"""Fault-tolerance demo: crash a training run mid-flight, then relaunch and
+watch it resume bit-exact from the last atomic checkpoint (the data stream
+seeks too).
+
+Run: PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import shutil
+import tempfile
+
+import jax
+
+from repro.common import param as pm
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models.paper_lm import (PaperLMConfig, paper_lm_defs,
+                                   paper_lm_loss)
+from repro.optim.optimizers import OptConfig
+from repro.train.trainer import Trainer, TrainLoopConfig
+
+workdir = tempfile.mkdtemp(prefix="repro_ft_")
+dc = DataConfig(vocab_size=256, seq_len=32, batch_size=16, n_clusters=16)
+cfg = PaperLMConfig(vocab_size=256, variant="moe", n_experts=8, k=2,
+                    d_model=32, expert_hidden=64, dropout=0.0)
+
+
+def make(crash_at=None):
+    params = pm.materialize(paper_lm_defs(cfg), jax.random.PRNGKey(0))
+    return Trainer(
+        loss_fn=lambda p, b, r: paper_lm_loss(p, b, cfg, rng=r),
+        params=params, oc=OptConfig(learning_rate=1e-2, warmup_steps=20),
+        loop=TrainLoopConfig(total_steps=80, checkpoint_every=20,
+                             log_every=20),
+        data_iter=DataIterator(dc), workdir=workdir,
+        crash_at_step=crash_at)
+
+
+print("=== run 1: will crash at step 50 (simulated node failure) ===")
+try:
+    make(crash_at=50).run()
+except RuntimeError as e:
+    print(f"!! {e}")
+
+print("\n=== run 2: relaunch — auto-restores the step-40 checkpoint ===")
+final = make().run()
+print(f"\nresumed run finished: loss={final['loss']:.4f} "
+      f"(straggler events logged: see workdir heartbeat)")
+shutil.rmtree(workdir, ignore_errors=True)

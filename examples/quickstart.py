@@ -1,0 +1,38 @@
+"""Quickstart: build the paper's Sparsely-Gated MoE layer, feed it a batch,
+inspect the balance diagnostics, and take one training step.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.core.moe import MoEArgs, moe_apply, moe_defs
+
+# 1. A sparsely-gated MoE: 32 experts, top-4 routing (the paper's flat-LM k).
+args = MoEArgs(n_experts=32, k=4, d_model=128, d_ff=512,
+               activation="relu",            # the paper's experts
+               gating_mode="noisy_topk",     # Eqs. 3-5
+               w_importance=0.1, w_load=0.1,  # §4 / Appendix A
+               dtype=jnp.float32)
+params = pm.materialize(moe_defs(args), jax.random.PRNGKey(0))
+print(f"experts hold {pm.param_count(params):,} parameters; "
+      f"each token touches only {args.k}/{args.n_experts} of them")
+
+# 2. Forward a batch of 1024 tokens ("convolutionally": any [T, d] batch).
+x = jax.random.normal(jax.random.PRNGKey(1), (1024, 128))
+y, aux = moe_apply(params, x, args, train=True, rng=jax.random.PRNGKey(2))
+print(f"out {y.shape}; aux loss {float(aux['aux_loss']):.4f}")
+for k, v in aux["metrics"].items():
+    print(f"  {k:>20s} = {float(v):.3f}")
+
+# 3. One SGD step on a toy objective — gates, experts and balance losses
+#    all train jointly by plain backprop (§2.1).
+def loss_fn(p):
+    y, aux = moe_apply(p, x, args, train=True, rng=jax.random.PRNGKey(3))
+    return jnp.mean((y - jnp.tanh(x)) ** 2) + aux["aux_loss"]
+
+loss, grads = jax.value_and_grad(loss_fn)(params)
+params = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads)
+print(f"step done: loss {float(loss):.4f} -> "
+      f"{float(loss_fn(params)):.4f}")

@@ -1,0 +1,120 @@
+"""Parameter-definition trees.
+
+Architectures declare parameters as pytrees of :class:`ParamDef` — pure
+shape/axes/init metadata, no allocation.  From one definition tree we derive:
+
+* ``materialize(tree, key)``      — real ``jnp`` arrays (smoke tests, training)
+* ``abstract(tree)``              — ``jax.ShapeDtypeStruct`` stand-ins (dry-run;
+                                    a 1T-param model never touches memory)
+* ``logical_specs(tree)``         — ``PartitionSpec`` tree of *logical* axis
+                                    names, resolved to mesh axes by
+                                    ``repro.sharding.partition``.
+
+Keeping shapes, shardings and initializers in a single declaration prevents
+the three from drifting apart as the model zoo grows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# A logical axis name, e.g. "embed", "mlp", "experts", or None (unsharded).
+Axis = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Axis, ...]           # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | embed | uniform_scale
+    dtype: Any = jnp.bfloat16
+    # fan_in override for "normal" (default: product of all but last dim is
+    # wrong for conv-like params, so layers may set it explicitly).
+    fan_in: int | None = None
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"shape {self.shape} and axes {self.axes} rank mismatch")
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map(f: Callable[[ParamDef], Any], tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_def)
+
+
+def _init_one(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+    if d.init == "normal":
+        fan_in = d.fan_in if d.fan_in is not None else (
+            d.shape[-2] if len(d.shape) >= 2 else d.shape[-1])
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, d.shape, jnp.float32)).astype(d.dtype)
+    if d.init == "uniform_scale":
+        fan_in = d.fan_in if d.fan_in is not None else d.shape[0]
+        lim = math.sqrt(3.0 / max(fan_in, 1))
+        return jax.random.uniform(
+            key, d.shape, jnp.float32, -lim, lim).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def materialize(tree, key: jax.Array):
+    """Allocate real arrays for every ParamDef leaf (deterministic per-path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = [_init_one(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract(tree, dtype_override=None):
+    """ShapeDtypeStruct stand-ins — no allocation; safe for 1T-param models."""
+    return _tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype_override or d.dtype),
+        tree)
+
+
+def logical_specs(tree):
+    """PartitionSpec tree over *logical* axis names."""
+    return _tree_map(lambda d: P(*d.axes), tree)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_def)
+    return sum(l.size if is_def(l) else l.size for l in leaves)
+
+
+def param_bytes(tree) -> int:
+    def nbytes(l):
+        if is_def(l):
+            return l.size * jnp.dtype(l.dtype).itemsize
+        return l.size * l.dtype.itemsize
+    return sum(nbytes(l) for l in
+               jax.tree_util.tree_leaves(tree, is_leaf=is_def))
+
+
+def cast(tree, dtype):
+    """Cast a materialized tree (no-op on non-float leaves)."""
+    def _c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_c, tree)

@@ -1,0 +1,21 @@
+"""Architecture registry: importing this package registers every config."""
+from repro.configs import (  # noqa: F401
+    arctic_480b,
+    falcon_mamba_7b,
+    gemma3_27b,
+    jamba_v01_52b,
+    kimi_k2_1t_a32b,
+    llama3_8b,
+    moe_paper,
+    musicgen_large,
+    pixtral_12b,
+    qwen3_1p7b,
+    smollm_135m,
+)
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    count_params,
+    get_config,
+    layer_kinds,
+    list_configs,
+)

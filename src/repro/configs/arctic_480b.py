@@ -1,0 +1,23 @@
+"""arctic-480b [moe]: 128 experts top-2 + parallel dense residual FFN.
+
+35L d_model=7168 56H (GQA kv=8, head_dim=128) expert d_ff=4864 vocab=32000.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Arctic's dense-MoE hybrid: every layer computes a small dense FFN *in
+parallel* with the top-2 MoE and sums both into the residual stream
+(``dense_residual=True``).  The dense branch width is set to d_model
+(assumption recorded in DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("arctic-480b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b", family="moe",
+        n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+        d_ff=7168, vocab_size=32000,
+        moe_positions=(0,), dense_residual=True,
+        n_experts=128, moe_k=2, moe_d_ff=4864,
+        capacity_factor=1.25, activation="swiglu",
+    )

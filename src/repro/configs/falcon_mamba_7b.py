@@ -1,0 +1,23 @@
+"""falcon-mamba-7b [ssm]: pure Mamba-1, attention-free.
+
+64L d_model=4096 (attn-free) d_ff=0 vocab=65024, ssm_state=16.
+[arXiv:2410.05355; unverified]
+
+Every layer is a Mamba block (no FFN, d_ff=0 per the assignment).  Being
+attention-free it runs all four shapes including ``long_500k`` with O(1)
+per-token decode state.
+
+Arch-applicability note (DESIGN.md): the paper's MoE technique targets FFN
+capacity; falcon-mamba has no FFN, so it is built WITHOUT the technique.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("falcon-mamba-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b", family="ssm",
+        n_layers=64, d_model=4096, vocab_size=65024,
+        d_ff=0,
+        ssm_d_state=16, ssm_d_conv=4, ssm_expand=2,
+    )

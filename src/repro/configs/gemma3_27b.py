@@ -1,0 +1,23 @@
+"""gemma3-27b [dense]: 5:1 local:global sliding-window attention, 128k ctx.
+
+62L d_model=5376 32H (GQA kv=16, head_dim=128) d_ff=21504 vocab=262144.
+[hf:google/gemma-3-1b-pt; unverified]
+
+Period-6 pattern: 5 sliding-window (1024) layers then 1 global layer.
+62 = 6·10 + 2, so ten stacked periods plus a 2-layer local tail.  The
+window bounds the KV cache for 52 of 62 layers, making ``long_500k``
+feasible (global layers' caches shard their sequence axis over the data
+mesh axis under the ``decode_long`` plan).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("gemma3-27b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=21504, vocab_size=262144,
+        period=6, global_attn_positions=(5,), sliding_window=1024,
+        qk_norm=True, rope_theta=1e6, activation="geglu",
+    )

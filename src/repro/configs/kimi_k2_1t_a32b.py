@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b [moe]: trillion-parameter MoE (paper-table config).
+
+61L d_model=7168 64H (GQA kv=8, head_dim=128) expert d_ff=2048
+vocab=163840, MoE 384 experts top-8.  [arXiv:2501.kimi2; unverified]
+
+This is the zoo's direct analogue of the paper's "outrageously large"
+regime: ~1T total parameters, ~32B active — conditional computation at a
+~32x capacity-to-compute ratio (the paper's Figure 2-left axis, scaled up
+a decade).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("kimi-k2-1t-a32b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=0, vocab_size=163840,
+        moe_positions=(0,),          # every layer is MoE
+        n_experts=384, moe_k=8, moe_d_ff=2048,
+        capacity_factor=1.25, activation="swiglu",
+    )

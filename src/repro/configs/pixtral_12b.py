@@ -1,0 +1,20 @@
+"""pixtral-12b [vlm]: Pixtral-ViT frontend (stub) + Mistral-Nemo-style decoder.
+
+40L d_model=5120 32H (GQA kv=8, head_dim=128) d_ff=14336 vocab=131072.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+
+The vision frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed patch embeddings for the first 64 positions.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("pixtral-12b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="vlm",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=131072,
+        rope_theta=1e6, activation="swiglu",
+        frontend="vision", n_prefix=64,
+    )

@@ -1,0 +1,92 @@
+"""Assigned input shapes × per-arch input_specs (ShapeDtypeStruct stand-ins).
+
+The four LM shapes (seq_len × global_batch):
+
+* ``train_4k``     4,096 × 256   → lowers ``train_step``
+* ``prefill_32k``  32,768 × 32   → lowers ``prefill_step``
+* ``decode_32k``   32,768 × 128  → lowers ``serve_step`` (1 token, 32k cache)
+* ``long_500k``    524,288 × 1   → ``serve_step``; sub-quadratic archs only
+
+``input_specs`` returns exactly what the lowered function takes — shape and
+dtype stand-ins, never allocated (the 1T-param kimi-k2 cells would not fit
+on the build host otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Is (arch × shape) runnable?  long_500k needs sub-quadratic attention
+    (decode against a full-attention 500k KV cache is memory-infeasible for
+    every layer; see DESIGN.md §Skips)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token KV cache on "
+                       "every layer exceeds the per-chip HBM budget; "
+                       "skip recorded in DESIGN.md")
+    return True, ""
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the *data* inputs of the step function."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.n_prefix:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), cfg.compute_dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.n_prefix:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), cfg.compute_dtype)
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract decode/prefill cache for this (arch × shape)."""
+    defs = transformer.cache_defs(cfg, shape.global_batch, shape.seq_len)
+    return pm.abstract(defs), defs
+
+
+def logical_batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Logical axes for each batch input (for in_shardings resolution)."""
+    if shape.kind == "train":
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    elif shape.kind == "prefill":
+        axes = {"tokens": ("batch", "seq")}
+    else:
+        axes = {"tokens": ("batch",)}
+    if cfg.n_prefix and shape.kind != "decode":
+        axes["prefix_embeds"] = ("batch", None, "embed")
+    return axes

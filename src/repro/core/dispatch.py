@@ -1,0 +1,131 @@
+"""Token dispatch / combine for sparse expert computation.
+
+XLA requires static shapes, so the paper's dynamic "send each token to its
+winning experts" becomes *capacity-based* dispatch: every expert owns a fixed
+buffer of ``capacity`` token slots.  Assignments beyond capacity are dropped
+(their gate weight is zeroed, so the token simply passes through the residual
+connection).  With the paper's Appendix-F batchwise gating the buffers are
+exactly full and nothing is dropped — that gating mode *is* this dispatch.
+
+Two implementations with identical semantics:
+
+* ``sort``   — O(T·k) scatter via a stable sort on expert id.  Scales to
+               hundreds of experts (kimi-k2's 384, arctic's 128).
+* ``einsum`` — GShard-style one-hot [T, E, C] masks.  O(T·E·C) memory but
+               pure MXU work; used as the reference oracle and for small E.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DispatchPlan(NamedTuple):
+    expert_index: jax.Array      # [T, k] int32
+    position: jax.Array          # [T, k] int32 slot within the expert buffer
+    weight: jax.Array            # [T, k] f32 combine weight (0 if dropped)
+    n_experts: int
+    capacity: int
+    fraction_dropped: jax.Array  # scalar f32
+
+
+def capacity_for(n_tokens: int, n_experts: int, k: int,
+                 capacity_factor: float, *, multiple: int = 8) -> int:
+    """Slots per expert: ceil(k*T/E * factor), rounded up for TPU tiling."""
+    raw = (k * n_tokens * capacity_factor) / max(n_experts, 1)
+    cap = int(-(-raw // 1))
+    cap = max(cap, 1)
+    return int(-(-cap // multiple) * multiple)
+
+
+def plan(expert_index: jax.Array, weight: jax.Array, n_experts: int,
+         capacity: int, *, priority: bool = False) -> DispatchPlan:
+    """Assign a buffer slot to every (token, k) pair.
+
+    ``priority=True`` gives over-capacity slots to the highest-weight
+    assignments instead of earliest-in-batch (beyond-paper option; the
+    paper's infrastructure used batch order).
+    """
+    t, k = expert_index.shape
+    flat_e = expert_index.reshape(-1)                       # [T*k]
+    flat_w = jnp.asarray(weight, jnp.float32).reshape(-1)
+    # Sort by expert id; zero-weight assignments (batchwise-gating padding)
+    # go last within their group so they never displace real tokens.
+    if priority:
+        order = jnp.lexsort((-flat_w, flat_e))
+    else:
+        order = jnp.argsort(flat_e * 2 + (flat_w <= 0), stable=True)
+    sorted_e = flat_e[order]
+    sorted_w = flat_w[order]
+    counts_all = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    # Position within expert group = sorted rank - group start.
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts_all)[:-1].astype(jnp.int32)])
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    pos_sorted = jnp.where(sorted_w > 0, rank, capacity)    # pad ⇒ dropped
+    position = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    position = position.reshape(t, k)
+    kept = position < capacity
+    w = jnp.where(kept, weight, 0.0)
+    denom = jnp.maximum(jnp.sum((jnp.asarray(weight) > 0), dtype=jnp.float32),
+                        1.0)
+    frac_dropped = jnp.sum(
+        ((jnp.asarray(weight) > 0) & ~kept).astype(jnp.float32)) / denom
+    return DispatchPlan(expert_index=expert_index, position=position,
+                        weight=w, n_experts=n_experts, capacity=capacity,
+                        fraction_dropped=frac_dropped)
+
+
+# ---------------------------------------------------------------------------
+# sort/scatter implementation
+# ---------------------------------------------------------------------------
+
+def dispatch(x: jax.Array, p: DispatchPlan) -> jax.Array:
+    """[T, d] -> [E, C, d].  Out-of-capacity scatters are dropped (OOB)."""
+    t, d = x.shape
+    k = p.expert_index.shape[1]
+    buf = jnp.zeros((p.n_experts, p.capacity, d), x.dtype)
+    flat_e = p.expert_index.reshape(-1)
+    flat_pos = p.position.reshape(-1)            # >= capacity ⇒ dropped by .at
+    xk = jnp.broadcast_to(x[:, None, :], (t, k, d)).reshape(t * k, d)
+    return buf.at[flat_e, flat_pos].set(xk, mode="drop")
+
+
+def combine(expert_out: jax.Array, p: DispatchPlan, dtype=None) -> jax.Array:
+    """[E, C, d] -> [T, d]: weighted gather, y = sum_k w_k * E_{e_k}(x)."""
+    t, k = p.expert_index.shape
+    gathered = expert_out[p.expert_index, jnp.clip(p.position, 0,
+                                                   p.capacity - 1)]  # [T,k,d]
+    w = p.weight.astype(jnp.float32)[..., None]
+    y = jnp.sum(gathered.astype(jnp.float32) * w, axis=1)
+    return y.astype(dtype or expert_out.dtype)
+
+
+# ---------------------------------------------------------------------------
+# einsum (GShard-style) reference implementation
+# ---------------------------------------------------------------------------
+
+def masks_einsum(p: DispatchPlan):
+    """Build dense dispatch/combine one-hot tensors [T, E, C]."""
+    e_oh = jax.nn.one_hot(p.expert_index, p.n_experts, dtype=jnp.float32)
+    pos_clipped = jnp.where(p.position < p.capacity, p.position, p.capacity)
+    c_oh = jax.nn.one_hot(pos_clipped, p.capacity, dtype=jnp.float32)
+    disp = jnp.einsum("tke,tkc->tec", e_oh, c_oh)
+    comb = jnp.einsum("tke,tkc,tk->tec", e_oh, c_oh,
+                      p.weight.astype(jnp.float32))
+    return disp, comb
+
+
+def dispatch_einsum(x: jax.Array, p: DispatchPlan) -> jax.Array:
+    disp, _ = masks_einsum(p)
+    return jnp.einsum("tec,td->ecd", disp,
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def combine_einsum(expert_out: jax.Array, p: DispatchPlan,
+                   dtype=None) -> jax.Array:
+    _, comb = masks_einsum(p)
+    y = jnp.einsum("tec,ecd->td", comb, expert_out.astype(jnp.float32))
+    return y.astype(dtype or expert_out.dtype)

@@ -1,0 +1,136 @@
+"""Explicit expert-parallel MoE with the paper's §3.1 communication schedule.
+
+The paper: "We distribute the standard layers ... according to conventional
+data-parallel schemes, but keep only one shared copy of each expert.  Each
+expert receives a combined batch consisting of the relevant examples from all
+of the data-parallel input batches."
+
+TPU mapping (shard_map, explicit collectives):
+
+* tokens shard over the dp axes; gating runs locally (data-parallel, tiny
+  replicated gate weights — "the number of gating parameters is small", §3.2);
+* each shard dispatches its local tokens into per-expert buffers, then an
+  ``all_to_all`` over the *ep* axis exchanges expert-major buffers so every
+  shard holds the combined batch for its local experts — the d× expert batch
+  improvement of §3.1;
+* expert weights shard over the ep axis (expert parallelism) and their
+  d_model dim over the dp axis (FSDP: all-gathered on use, reduce-scattered
+  in backward) — so exactly **one** copy of every expert exists cluster-wide,
+  as in the paper;
+* a second ``all_to_all`` returns expert outputs, combined locally.
+
+This is the schedule the GSPMD path must be compared against in §Perf: a2a
+moves ``2 * k * tokens * d_model`` bytes per layer, independent of E.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import dispatch as dsp
+from repro.core import gating, losses
+from repro.core.moe import MoEArgs
+
+
+def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
+               ep_axis: str, fsdp_axis: str | None):
+    """Body executed per shard under shard_map."""
+    ep = jax.lax.axis_size(ep_axis)
+    ep_rank = jax.lax.axis_index(ep_axis)
+    t_local, d = x_local.shape
+    assert a.n_experts % ep == 0, (a.n_experts, ep)
+    e_local = a.n_experts // ep
+
+    # Per-shard rng so noise differs across shards.
+    if rng is not None:
+        rng = jax.random.fold_in(rng, ep_rank)
+        if fsdp_axis is not None:
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(fsdp_axis))
+
+    info = gating.noisy_topk_gating(params["gate"], x_local, a.k,
+                                    train=train, rng=rng)
+    capacity = dsp.capacity_for(t_local, a.n_experts, a.k, a.capacity_factor)
+    p = dsp.plan(info.expert_index, info.combine_weights, a.n_experts,
+                 capacity, priority=a.priority_dispatch)
+    buf = dsp.dispatch(x_local, p)                     # [E, C, d] local
+
+    # all_to_all #1: expert-major exchange.  [E, C, d] -> [E/ep, ep*C, d]
+    buf = buf.reshape(ep, e_local, capacity, d)
+    buf = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                             tiled=False)              # [ep, e_local, C, d]
+    buf = jnp.moveaxis(buf, 0, 1).reshape(e_local, ep * capacity, d)
+
+    # FSDP: all-gather the d_model-sharded expert weights on use.
+    def gather_w(w, dim):
+        if fsdp_axis is None:
+            return w
+        return jax.lax.all_gather(w, fsdp_axis, axis=dim, tiled=True)
+
+    w1 = gather_w(params["w1"], 1).astype(a.dtype)     # [e_local, d, f]
+    w2 = gather_w(params["w2"], 2).astype(a.dtype)     # [e_local, f, d]
+    h = jnp.einsum("ecd,edf->ecf", buf, w1,
+                   preferred_element_type=jnp.float32)
+    if a.activation == "swiglu":
+        w3 = gather_w(params["w3"], 1).astype(a.dtype)
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3,
+                                        preferred_element_type=jnp.float32)
+    else:
+        h = jax.nn.relu(h)
+    out = jnp.einsum("ecf,efd->ecd", h.astype(a.dtype), w2,
+                     preferred_element_type=jnp.float32).astype(a.dtype)
+
+    # all_to_all #2: return to token-major shards.
+    out = out.reshape(e_local, ep, capacity, d)
+    out = jnp.moveaxis(out, 1, 0)                      # [ep, e_local, C, d]
+    out = jax.lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0,
+                             tiled=False)
+    out = out.reshape(a.n_experts, capacity, d)
+
+    y = dsp.combine(out, p, dtype=x_local.dtype)
+    aux_loss = (losses.importance_loss(info.gates, a.w_importance)
+                + losses.load_loss(info.load, a.w_load))
+    # Balance statistics are over the *global* batch: psum the raw vectors.
+    axes = (ep_axis,) if fsdp_axis is None else (ep_axis, fsdp_axis)
+    imp = jax.lax.psum(losses.importance(info.gates), axes)
+    load = jax.lax.psum(info.load, axes)
+    aux_loss = jax.lax.pmean(aux_loss, axes)
+    metrics = {
+        "cv_importance": jnp.sqrt(losses.cv_squared(imp)),
+        "cv_load": jnp.sqrt(losses.cv_squared(load)),
+        "max_over_mean_load": jnp.max(load) / jnp.maximum(jnp.mean(load),
+                                                          1e-9),
+        "fraction_dropped": jax.lax.pmean(p.fraction_dropped, axes),
+    }
+    return y, {"aux_loss": aux_loss, "metrics": metrics}
+
+
+def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh, *, train: bool = True,
+                 rng: jax.Array | None = None, ep_axis: str = "model",
+                 dp_axes: tuple[str, ...] = ("data",)):
+    """Expert-parallel MoE over a flat token batch x: [T, d_model].
+
+    Tokens shard over (dp_axes..., ep_axis); expert weights shard as
+    [experts -> ep_axis, d_model -> dp_axes[-1] (FSDP)]; gates replicated.
+    """
+    fsdp_axis = dp_axes[-1] if dp_axes else None
+    token_spec = P(tuple(dp_axes) + (ep_axis,), None)
+    w_specs = {
+        "gate": jax.tree_util.tree_map(lambda _: P(None, None),
+                                       params["gate"]),
+        "w1": P(ep_axis, fsdp_axis, None),
+        "w2": P(ep_axis, None, fsdp_axis),
+    }
+    if "w3" in params:
+        w_specs["w3"] = P(ep_axis, fsdp_axis, None)
+    aux_spec = {"aux_loss": P(), "metrics": {
+        "cv_importance": P(), "cv_load": P(), "max_over_mean_load": P(),
+        "fraction_dropped": P()}}
+    fn = functools.partial(_local_moe, a=a, train=train, rng=rng,
+                           ep_axis=ep_axis, fsdp_axis=fsdp_axis)
+    return shard_map(fn, mesh=mesh, in_specs=(w_specs, token_spec),
+                     out_specs=(token_spec, aux_spec),
+                     check_rep=False)(params, x)

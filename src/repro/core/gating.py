@@ -1,0 +1,200 @@
+"""Gating networks for the Sparsely-Gated Mixture-of-Experts layer.
+
+Faithful implementations of the paper's gating functions:
+
+* ``softmax_gating``      — Eq. (2),  G_sigma(x) = Softmax(x @ Wg)
+* ``noisy_topk_gating``   — Eqs. (3)-(5): tunable Gaussian noise, KeepTopK,
+  softmax over the kept entries.  Also returns the smooth load estimator
+  P(x, i) of Appendix A (Eqs. 8-10) used by L_load.
+* ``batchwise_gating``    — Appendix F "strictly balanced" gating: top-m per
+  expert across the batch (Eq. 18).  On TPU this is the *native* mode — every
+  expert receives exactly the same number of tokens, i.e. static shapes.
+* ``threshold_gating``    — Appendix F inference mask (Eq. 19) with the
+  learned per-expert thresholds T, trained by L_batchwise (Eq. 20).
+
+All gating math runs in float32 regardless of the activation dtype.
+
+Initialization: Wg and Wnoise are zero-initialized, which "yields no signal
+and some noise" (Appendix A) — the network starts perfectly load-balanced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+
+NOISE_EPSILON = 1e-2  # floor on the noise std-dev, as in the reference impl.
+
+
+class GatingInfo(NamedTuple):
+    """Everything downstream consumers need from a gating decision."""
+    combine_weights: jax.Array   # [T, k]  float32, the non-zero G(x) values
+    expert_index: jax.Array      # [T, k]  int32, which expert each weight is for
+    gates: jax.Array             # [T, E]  float32 sparse gate matrix (G(x))
+    load: jax.Array              # [E]     float32 smooth load estimator Load(X)
+    raw_logits: jax.Array        # [T, E]  clean logits x @ Wg (pre-noise)
+
+
+def gating_defs(d_model: int, n_experts: int, *, noisy: bool = True,
+                dtype=jnp.float32) -> dict:
+    """Zero-initialized Wg / Wnoise (Appendix A: balanced initial load)."""
+    defs = {
+        "wg": ParamDef((d_model, n_experts), ("embed", "experts"),
+                       init="zeros", dtype=dtype),
+    }
+    if noisy:
+        defs["wnoise"] = ParamDef((d_model, n_experts), ("embed", "experts"),
+                                  init="zeros", dtype=dtype)
+    return defs
+
+
+def threshold_defs(n_experts: int, dtype=jnp.float32) -> dict:
+    """Per-expert thresholds T for Appendix-F inference (Eq. 19)."""
+    return {"t": ParamDef((n_experts,), ("experts",), init="zeros",
+                          dtype=dtype)}
+
+
+def softmax_gating(params, x: jax.Array) -> jax.Array:
+    """Eq. (2): dense softmax gates [T, E] in float32."""
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(params["wg"], jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def _top_k(v: jax.Array, k: int):
+    vals, idx = jax.lax.top_k(v, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def _normal_cdf(z):
+    return 0.5 * (1.0 + jax.lax.erf(z / jnp.sqrt(2.0).astype(z.dtype)))
+
+
+def noisy_topk_gating(
+    params,
+    x: jax.Array,
+    k: int,
+    *,
+    train: bool,
+    rng: jax.Array | None = None,
+    valid: jax.Array | None = None,
+) -> GatingInfo:
+    """Eqs. (3)-(5) + the Appendix-A load estimator.
+
+    H(x)_i = (x Wg)_i + StandardNormal() * Softplus((x Wnoise)_i)
+    G(x)   = Softmax(KeepTopK(H(x), k))          (softmax over the k survivors)
+
+    The load probability (Eq. 9) uses the *clean* logit in the numerator and
+    the k-th-excluding-self threshold of the *noisy* logits, computed from the
+    top-(k+1) values: for a winner the threshold is the (k+1)-th noisy value,
+    for a loser it is the k-th.
+
+    ``valid`` ([T] in {0,1}) masks padding rows (hierarchical-MoE buffers):
+    masked rows contribute nothing to gates, combine weights, or load.
+    """
+    xf = jnp.asarray(x, jnp.float32)
+    clean = xf @ jnp.asarray(params["wg"], jnp.float32)            # [T, E]
+    n_experts = clean.shape[-1]
+    k = min(k, n_experts)
+
+    if train and "wnoise" in params and rng is not None:
+        raw_noise = xf @ jnp.asarray(params["wnoise"], jnp.float32)
+        noise_std = jax.nn.softplus(raw_noise) + NOISE_EPSILON      # [T, E]
+        noisy = clean + jax.random.normal(rng, clean.shape) * noise_std
+    else:
+        noise_std = None
+        noisy = clean
+
+    # KeepTopK + softmax over survivors (renormalized over k).
+    kk = min(k + 1, n_experts)
+    top_vals, top_idx = _top_k(noisy, kk)                           # [T, k+1]
+    topk_vals, topk_idx = top_vals[..., :k], top_idx[..., :k]
+    combine = jax.nn.softmax(topk_vals, axis=-1)                    # [T, k]
+    if valid is not None:
+        combine = combine * valid[:, None]
+
+    # Scatter back to a sparse [T, E] gate matrix (zeros off the top-k).
+    gates = jnp.zeros_like(clean).at[
+        jnp.arange(clean.shape[0])[:, None], topk_idx].set(combine)
+
+    # Smooth load estimator (Appendix A).  Only meaningful with noise.
+    if noise_std is not None and kk > k:
+        in_topk = gates > 0.0                                       # [T, E]
+        thresh_if_in = top_vals[..., k][:, None]      # (k+1)-th noisy value
+        thresh_if_out = top_vals[..., k - 1][:, None]  # k-th noisy value
+        threshold = jnp.where(in_topk, thresh_if_in, thresh_if_out)
+        p = _normal_cdf((clean - threshold) / noise_std)            # Eq. (9)
+        if valid is not None:
+            p = p * valid[:, None]
+        load = jnp.sum(p, axis=0)                                   # Eq. (10)
+    else:
+        # Deterministic fall-back: load == hard assignment counts.
+        hard = (gates > 0.0).astype(jnp.float32)
+        if valid is not None:
+            hard = hard * valid[:, None]
+        load = jnp.sum(hard, axis=0)
+
+    return GatingInfo(combine_weights=combine, expert_index=topk_idx,
+                      gates=gates, load=load, raw_logits=clean)
+
+
+def batchwise_gating(params, x: jax.Array, k: int) -> GatingInfo:
+    """Appendix F, Eq. (16)+(18): keep the top m = k*T/E tokens *per expert*.
+
+    Every expert receives exactly m tokens — perfectly static shapes, which is
+    why the paper used it "if every expert received exactly the same batch
+    size", and why it is the TPU-native gating mode here.
+    """
+    g_sigma = softmax_gating(params, x)                             # [T, E]
+    t, e = g_sigma.shape
+    m = max((k * t) // e, 1)
+    # top-m per expert over the batch axis.
+    col_vals, col_idx = jax.lax.top_k(g_sigma.T, m)                 # [E, m]
+    mask = jnp.zeros((e, t), jnp.float32).at[
+        jnp.arange(e)[:, None], col_idx].set(1.0).T                 # [T, E]
+    masked = g_sigma * mask
+    denom = jnp.sum(masked, axis=-1, keepdims=True)
+    gates = masked / jnp.maximum(denom, 1e-9)                       # Eq. (16)
+
+    # Per-token top-k of the masked gates for the dispatch interface.  A token
+    # may win fewer than k experts (or none); zero weights are simply unused
+    # capacity downstream.
+    kk = min(k, e)
+    combine, topk_idx = _top_k(gates, kk)
+    load = jnp.sum(mask, axis=0)
+    return GatingInfo(combine_weights=combine, expert_index=topk_idx,
+                      gates=gates, load=load,
+                      raw_logits=jnp.log(jnp.maximum(g_sigma, 1e-20)))
+
+
+def threshold_gating(params, thresholds, x: jax.Array, k: int) -> GatingInfo:
+    """Appendix F inference path, Eq. (19): M_i = 1 if g_i > T_i."""
+    g_sigma = softmax_gating(params, x)
+    mask = (g_sigma > jnp.asarray(thresholds["t"], jnp.float32)[None, :])
+    masked = g_sigma * mask
+    denom = jnp.sum(masked, axis=-1, keepdims=True)
+    gates = masked / jnp.maximum(denom, 1e-9)
+    kk = min(k, g_sigma.shape[-1])
+    combine, topk_idx = _top_k(gates, kk)
+    load = jnp.sum(mask.astype(jnp.float32), axis=0)
+    return GatingInfo(combine_weights=combine, expert_index=topk_idx,
+                      gates=gates, load=load,
+                      raw_logits=jnp.log(jnp.maximum(g_sigma, 1e-20)))
+
+
+def batchwise_threshold_loss(params, thresholds, x: jax.Array, k: int
+                             ) -> jax.Array:
+    """Eq. (20): aligns the threshold mask with the batchwise mask."""
+    g_sigma = softmax_gating(params, x)                             # [T, E]
+    t, e = g_sigma.shape
+    m = max((k * t) // e, 1)
+    col_vals, col_idx = jax.lax.top_k(g_sigma.T, m)
+    m_batch = jnp.zeros((e, t), jnp.float32).at[
+        jnp.arange(e)[:, None], col_idx].set(1.0).T                 # [T, E]
+    tvec = jnp.asarray(thresholds["t"], jnp.float32)[None, :]
+    m_thresh = (g_sigma > tvec).astype(jnp.float32)
+    # Straight-through on the indicator; gradient flows via (X - T).
+    return jnp.sum((m_thresh - m_batch) * (g_sigma - tvec)) / t

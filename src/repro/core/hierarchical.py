@@ -1,0 +1,168 @@
+"""Two-level hierarchical Mixture-of-Experts (Appendix B).
+
+A primary gating network selects among ``a`` groups; each group is itself a
+secondary MoE over ``b`` experts.  Output (Eq. 12):
+
+    y_H = sum_i sum_j G_primary(x)_i * G_i(x)_j * E_{i,j}(x)
+
+Utilization metrics follow Eqs. (13)-(14):
+
+    Importance_H(X)_{i,j} = sum_x Gp(x)_i * G_i(x)_j
+    Load_H(X)_{i,j}       = Load_primary(X)_i * Load_i(X^(i))_j / |X^(i)|
+
+The paper used the hierarchy so 16 GPUs could host 4096+ experts with a
+small branching factor; here the primary branch maps onto the *model* mesh
+axis (one group of secondary experts per model-shard), the exact analogue of
+"each secondary MoE resides on one device" (§3.1).
+
+Implementation: primary capacity-dispatch puts tokens into [a, Cp, d]
+buffers, then the secondary MoE runs vmapped over groups with padding-slot
+masking so padded (zero) tokens influence neither gates nor load statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.core import dispatch as dsp
+from repro.core import gating, losses
+from repro.sharding import partition
+
+
+@dataclasses.dataclass(frozen=True)
+class HMoEArgs:
+    n_groups: int                 # a — primary branching factor
+    n_experts_per_group: int      # b — secondary branching factor
+    k_primary: int                # paper: k=2 at each level for the big LMs
+    k_secondary: int
+    d_model: int
+    d_ff: int
+    activation: str = "relu"
+    capacity_factor: float = 2.0
+    w_importance: float = 0.1
+    w_load: float = 0.1
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def n_experts(self) -> int:
+        return self.n_groups * self.n_experts_per_group
+
+
+def hmoe_defs(a: HMoEArgs) -> dict:
+    gated = a.activation == "swiglu"
+    defs = {
+        "gate_primary": gating.gating_defs(a.d_model, a.n_groups),
+        # Secondary gates stacked over groups: [a, d_model, b].
+        "gate_secondary": {
+            "wg": ParamDef((a.n_groups, a.d_model, a.n_experts_per_group),
+                           ("expert_groups", "embed", "experts"),
+                           init="zeros", dtype=jnp.float32),
+            "wnoise": ParamDef((a.n_groups, a.d_model,
+                                a.n_experts_per_group),
+                               ("expert_groups", "embed", "experts"),
+                               init="zeros", dtype=jnp.float32),
+        },
+        "w1": ParamDef((a.n_groups, a.n_experts_per_group, a.d_model, a.d_ff),
+                       ("expert_groups", "experts", "expert_embed",
+                        "expert_mlp"),
+                       dtype=a.dtype, fan_in=a.d_model),
+        "w2": ParamDef((a.n_groups, a.n_experts_per_group, a.d_ff, a.d_model),
+                       ("expert_groups", "experts", "expert_mlp",
+                        "expert_embed"),
+                       dtype=a.dtype, fan_in=a.d_ff),
+    }
+    if gated:
+        defs["w3"] = ParamDef(
+            (a.n_groups, a.n_experts_per_group, a.d_model, a.d_ff),
+            ("expert_groups", "experts", "expert_embed", "expert_mlp"),
+            dtype=a.dtype, fan_in=a.d_model)
+    return defs
+
+
+def _secondary_one_group(gate_params, w1, w2, w3, x_grp, valid, a: HMoEArgs,
+                         train: bool, rng):
+    """Run one group's secondary MoE on its [Cp, d] buffer.
+
+    ``valid`` masks the padding slots left by primary capacity dispatch.
+    Returns (y [Cp, d], importance_j [b], load_j [b], n_valid scalar).
+    """
+    info = gating.noisy_topk_gating(gate_params, x_grp, a.k_secondary,
+                                    train=train, rng=rng, valid=valid)
+    cap = dsp.capacity_for(x_grp.shape[0], a.n_experts_per_group,
+                           a.k_secondary, a.capacity_factor)
+    p = dsp.plan(info.expert_index, info.combine_weights,
+                 a.n_experts_per_group, cap)
+    buf = dsp.dispatch(x_grp, p)
+    h = jnp.einsum("ecd,edf->ecf", buf, w1.astype(buf.dtype),
+                   preferred_element_type=jnp.float32)
+    if a.activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, w3.astype(buf.dtype),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.relu(h)
+    out = jnp.einsum("ecf,efd->ecd", h.astype(buf.dtype),
+                     w2.astype(buf.dtype),
+                     preferred_element_type=jnp.float32).astype(buf.dtype)
+    y = dsp.combine(out, p, dtype=x_grp.dtype)
+    importance_j = losses.importance(info.gates)                # [b]
+    load_j = info.load                                          # [b], masked
+    n_valid = jnp.sum(valid)
+    return y, importance_j, load_j, n_valid
+
+
+def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
+               rng: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """x: [T, d_model] -> (y [T, d_model], aux)."""
+    t, d = x.shape
+    rng_p, rng_s = (jax.random.split(rng) if rng is not None
+                    else (None, None))
+    prim = gating.noisy_topk_gating(params["gate_primary"], x, a.k_primary,
+                                    train=train, rng=rng_p)
+    cap_p = dsp.capacity_for(t, a.n_groups, a.k_primary, a.capacity_factor)
+    plan_p = dsp.plan(prim.expert_index, prim.combine_weights, a.n_groups,
+                      cap_p)
+    buf = dsp.dispatch(x, plan_p)                      # [a, Cp, d]
+    valid = dsp.dispatch(jnp.ones((t, 1), x.dtype), plan_p)[..., 0]
+    valid = (valid > 0).astype(jnp.float32)            # [a, Cp]
+    buf = partition.with_constraint(buf, partition.PLANS["dp_tp_ep"],
+                                    ("expert_groups", None, "embed"))
+
+    w3 = params.get("w3", jnp.zeros_like(params["w1"]))
+    rngs = (jax.random.split(rng_s, a.n_groups) if rng_s is not None
+            else None)
+    sec = jax.vmap(
+        lambda gp, gn, w1, w2, w3g, xg, vg, rg: _secondary_one_group(
+            {"wg": gp, "wnoise": gn}, w1, w2, w3g, xg, vg, a, train, rg))
+    y_grp, imp_sec, load_sec, n_valid = sec(
+        params["gate_secondary"]["wg"], params["gate_secondary"]["wnoise"],
+        params["w1"], params["w2"], w3, buf, valid,
+        rngs if rngs is not None else jnp.zeros((a.n_groups, 2), jnp.uint32))
+
+    y = dsp.combine(y_grp, plan_p, dtype=x.dtype)       # primary combine
+
+    # Eq. (13): Importance_H = Gp_i * G_i_j summed over tokens.  The
+    # secondary importance was computed on dispatched tokens whose combine
+    # weights already include only the secondary gates, so scale by the mean
+    # primary gate mass per group.
+    imp_primary = losses.importance(prim.gates)                     # [a]
+    imp_h = (imp_sec * (imp_primary /
+                        jnp.maximum(n_valid, 1.0))[:, None])        # [a, b]
+    # Eq. (14): Load_H = Load_p_i * Load_i / |X^(i)|.
+    load_h = (prim.load[:, None] * load_sec /
+              jnp.maximum(n_valid, 1.0)[:, None])                   # [a, b]
+
+    aux_loss = (a.w_importance * losses.cv_squared(imp_h.reshape(-1))
+                + a.w_load * losses.cv_squared(load_h.reshape(-1)))
+    metrics = {
+        "cv_importance": jnp.sqrt(losses.cv_squared(imp_h.reshape(-1))),
+        "cv_load": jnp.sqrt(losses.cv_squared(load_h.reshape(-1))),
+        "max_over_mean_load": jnp.max(load_h) / jnp.maximum(
+            jnp.mean(load_h), 1e-9),
+        "fraction_dropped": plan_p.fraction_dropped,
+    }
+    return y, {"aux_loss": aux_loss, "metrics": metrics}

@@ -1,0 +1,55 @@
+"""Auxiliary balancing losses (§4 and Appendix A).
+
+* ``importance_loss`` — Eq. (6)+(7): CV(sum_x G(x))^2 * w_importance.
+* ``load_loss``       — Eq. (11):     CV(Load(X))^2   * w_load.
+* ``cv_squared``      — the shared squared coefficient of variation.
+
+Both losses are computed in float32; with zero-initialized gates every expert
+starts with identical importance/load so both losses start at ~0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cv_squared(x: jax.Array, eps: float = 1e-10) -> jax.Array:
+    """Squared coefficient of variation: Var(x) / Mean(x)^2.
+
+    Returns 0 for vectors of length <= 1 (a single expert cannot be
+    imbalanced), matching the reference implementation.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.shape[-1] <= 1:
+        return jnp.zeros((), jnp.float32)
+    mean = jnp.mean(x, axis=-1)
+    var = jnp.var(x, axis=-1)
+    return var / (mean * mean + eps)
+
+
+def importance(gates: jax.Array) -> jax.Array:
+    """Eq. (6): Importance(X)_i = sum_x G(x)_i.  gates: [T, E] -> [E]."""
+    return jnp.sum(jnp.asarray(gates, jnp.float32), axis=0)
+
+
+def importance_loss(gates: jax.Array, w_importance: float) -> jax.Array:
+    """Eq. (7)."""
+    return w_importance * cv_squared(importance(gates))
+
+
+def load_loss(load: jax.Array, w_load: float) -> jax.Array:
+    """Eq. (11); `load` is the smooth estimator from the gating network."""
+    return w_load * cv_squared(load)
+
+
+def balance_metrics(gates: jax.Array, load: jax.Array) -> dict:
+    """The Table-6 diagnostics: CV(Importance), CV(Load), max/mean load."""
+    imp = importance(gates)
+    loadf = jnp.asarray(load, jnp.float32)
+    return {
+        "cv_importance": jnp.sqrt(cv_squared(imp)),
+        "cv_load": jnp.sqrt(cv_squared(loadf)),
+        "max_over_mean_load": jnp.max(loadf) / jnp.maximum(
+            jnp.mean(loadf), 1e-9),
+        "fraction_dropped": jnp.zeros((), jnp.float32),  # filled by dispatch
+    }

@@ -1,0 +1,175 @@
+"""The Sparsely-Gated Mixture-of-Experts layer (§2) as a composable module.
+
+``moe_defs`` declares the parameters; ``moe_apply`` runs gating → dispatch →
+expert FFN → combine and returns (output, aux) where aux carries the §4
+balancing losses and the Table-6 diagnostics.
+
+Expert networks are the paper's one-hidden-layer ReLU FFNs by default;
+``activation="swiglu"`` upgrades them to gated-SiLU experts (w1/w3/w2) for
+the modern architectures in the zoo (kimi-k2, arctic, jamba).
+
+Distribution: logical axes are annotated so that under the ``dp_tp_ep`` plan
+experts shard over the *model* mesh axis (expert parallelism, §3.1) while
+their d_model dimension shards over *data* (FSDP — exactly one copy of every
+expert across the cluster, as the paper specifies).  The explicit all-to-all
+schedule lives in ``expert_parallel.py``; this module uses GSPMD constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.core import dispatch as dsp
+from repro.core import gating, losses
+from repro.sharding import partition
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEArgs:
+    n_experts: int
+    k: int
+    d_model: int
+    d_ff: int
+    activation: str = "relu"            # relu (paper) | swiglu
+    gating_mode: str = "noisy_topk"     # noisy_topk | batchwise | threshold
+    capacity_factor: float = 2.0
+    eval_capacity_factor: float = 2.0
+    w_importance: float = 0.1           # paper §C.1
+    w_load: float = 0.1
+    dispatch_impl: str = "sort"         # sort | einsum
+    expert_impl: str = "einsum"         # einsum | pallas
+    priority_dispatch: bool = False
+    sigmoid_output: bool = False        # paper's LM passes MoE out thru sigmoid
+    wide_dispatch: bool = True          # §3.1 combined-batch token resharding
+    dtype: Any = jnp.bfloat16
+
+
+def moe_defs(a: MoEArgs) -> dict:
+    gated = a.activation == "swiglu"
+    defs = {
+        "gate": gating.gating_defs(a.d_model, a.n_experts,
+                                   noisy=a.gating_mode == "noisy_topk"),
+        "w1": ParamDef((a.n_experts, a.d_model, a.d_ff),
+                       ("experts", "expert_embed", "expert_mlp"),
+                       dtype=a.dtype, fan_in=a.d_model),
+        "w2": ParamDef((a.n_experts, a.d_ff, a.d_model),
+                       ("experts", "expert_mlp", "expert_embed"),
+                       dtype=a.dtype, fan_in=a.d_ff),
+    }
+    if gated:
+        defs["w3"] = ParamDef((a.n_experts, a.d_model, a.d_ff),
+                              ("experts", "expert_embed", "expert_mlp"),
+                              dtype=a.dtype, fan_in=a.d_model)
+    if a.gating_mode == "threshold":
+        defs["thresholds"] = gating.threshold_defs(a.n_experts)
+    return defs
+
+
+def expert_ffn(params, x: jax.Array, a: MoEArgs) -> jax.Array:
+    """Apply every expert to its [E, C, d] buffer of dispatched tokens."""
+    if a.expert_impl == "pallas":
+        from repro.kernels import ops  # lazy: kernels are optional
+        return ops.expert_ffn(params, x, activation=a.activation)
+    w1 = params["w1"].astype(a.dtype)
+    w2 = params["w2"].astype(a.dtype)
+    h = jnp.einsum("ecd,edf->ecf", x, w1,
+                   preferred_element_type=jnp.float32)
+    if a.activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", x, params["w3"].astype(a.dtype),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.relu(h)
+    h = h.astype(a.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w2,
+                      preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def run_gating(params, x: jax.Array, a: MoEArgs, *, train: bool,
+               rng: jax.Array | None) -> gating.GatingInfo:
+    if a.gating_mode == "noisy_topk":
+        return gating.noisy_topk_gating(params["gate"], x, a.k,
+                                        train=train, rng=rng)
+    if a.gating_mode == "batchwise":
+        return gating.batchwise_gating(params["gate"], x, a.k)
+    if a.gating_mode == "threshold":
+        if train:  # train with the batchwise mask, infer with thresholds
+            return gating.batchwise_gating(params["gate"], x, a.k)
+        return gating.threshold_gating(params["gate"], params["thresholds"],
+                                       x, a.k)
+    raise ValueError(f"unknown gating mode {a.gating_mode!r}")
+
+
+def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
+              rng: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """x: [T, d_model] (tokens already flattened — the paper's 'convolutional'
+    application over all positions of a batch, §3.1)."""
+    t, d = x.shape
+    info = run_gating(params, x, a, train=train, rng=rng)
+
+    cf = a.capacity_factor if train else a.eval_capacity_factor
+    if a.gating_mode in ("batchwise", "threshold") and train:
+        # Appendix F: exactly m = k·T/E slots per expert; nothing dropped.
+        capacity = max((a.k * t) // a.n_experts, 1)
+        capacity = int(-(-capacity // 8) * 8)
+    else:
+        capacity = dsp.capacity_for(t, a.n_experts, a.k, cf)
+    p = dsp.plan(info.expert_index, info.combine_weights, a.n_experts,
+                 capacity, priority=a.priority_dispatch)
+
+    token_axis = "tokens" if a.wide_dispatch else "batch"
+    x = partition.with_constraint(x, _rules(), (token_axis, "embed"))
+    if a.dispatch_impl == "einsum":
+        buf = dsp.dispatch_einsum(x, p)
+    else:
+        buf = dsp.dispatch(x, p)
+    buf = partition.with_constraint(
+        buf, _rules(), ("experts", "expert_capacity", "embed"))
+    out = expert_ffn(params, buf, a)
+    out = partition.with_constraint(
+        out, _rules(), ("experts", "expert_capacity", "embed"))
+    if a.dispatch_impl == "einsum":
+        y = dsp.combine_einsum(out, p, dtype=x.dtype)
+    else:
+        y = dsp.combine(out, p, dtype=x.dtype)
+    y = partition.with_constraint(y, _rules(), (token_axis, "embed"))
+    if a.sigmoid_output:
+        y = jax.nn.sigmoid(y.astype(jnp.float32)).astype(x.dtype)
+
+    aux_loss = (losses.importance_loss(info.gates, a.w_importance)
+                + losses.load_loss(info.load, a.w_load))
+    if a.gating_mode == "threshold" and train:
+        aux_loss = aux_loss + gating.batchwise_threshold_loss(
+            params["gate"], params["thresholds"], x, a.k)
+    metrics = losses.balance_metrics(info.gates, info.load)
+    metrics["fraction_dropped"] = p.fraction_dropped
+    return y, {"aux_loss": aux_loss, "metrics": metrics}
+
+
+_RULES_OVERRIDE: list = []
+
+
+def _rules() -> partition.ShardingRules:
+    """Active sharding rules (train step pushes its plan here)."""
+    if _RULES_OVERRIDE:
+        return _RULES_OVERRIDE[-1]
+    return partition.PLANS["dp_tp_ep"]
+
+
+class rules_scope:
+    """Context manager: route MoE-internal constraints to a specific plan."""
+
+    def __init__(self, rules: partition.ShardingRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _RULES_OVERRIDE.append(self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        _RULES_OVERRIDE.pop()
+        return False

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU these dispatch the compiled kernels; on the CPU build host they run
+in interpret mode (kernel bodies executed with jnp), which is how the
+allclose tests against ``ref.py`` validate them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gmm as gmm_lib
+from repro.kernels import topk_gating as topk_lib
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def gmm(x, w, *, activation: str = "none", bm=128, bn=128, bk=128):
+    return gmm_lib.gmm(x, w, activation=activation, bm=bm, bn=bn, bk=bk,
+                       interpret=_INTERPRET)
+
+
+def expert_ffn(params, x, *, activation: str = "relu"):
+    """Two fused GMMs: up-projection (+act) then down-projection.
+
+    x: [E, C, d]; params carries w1 [E,d,f], w2 [E,f,d], (w3 for swiglu).
+    """
+    dt = x.dtype
+    w1 = params["w1"].astype(dt)
+    w2 = params["w2"].astype(dt)
+    if activation == "swiglu":
+        h = gmm(x, w1, activation="silu")
+        g = gmm(x, params["w3"].astype(dt), activation="none")
+        h = (h.astype(jnp.float32) * g.astype(jnp.float32)).astype(dt)
+    else:
+        h = gmm(x, w1, activation="relu")
+    return gmm(h, w2, activation="none")
+
+
+def topk_gating(logits, k: int, block_t: int = 256):
+    return topk_lib.topk_gating(logits, k, block_t=block_t,
+                                interpret=_INTERPRET)

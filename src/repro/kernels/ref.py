@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jax.Array, w: jax.Array, *, activation: str = "none"
+            ) -> jax.Array:
+    """Grouped (per-expert) matmul: [E,C,K] x [E,K,N] -> [E,C,N]."""
+    out = jnp.einsum("eck,ekn->ecn", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation == "silu":
+        out = jax.nn.silu(out)
+    return out.astype(x.dtype)
+
+
+def expert_ffn_ref(x: jax.Array, w1: jax.Array, w2: jax.Array,
+                   w3: jax.Array | None = None) -> jax.Array:
+    """The paper's one-hidden-layer ReLU expert (§3.2), or gated-SiLU when
+    w3 is given.  [E,C,d] -> [E,C,d]."""
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w1.astype(jnp.float32))
+    if w3 is None:
+        h = jax.nn.relu(h)
+    else:
+        g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                       w3.astype(jnp.float32))
+        h = jax.nn.silu(h) * g
+    out = jnp.einsum("ecf,efd->ecd", h, w2.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def topk_gating_ref(logits: jax.Array, k: int):
+    """Softmax-over-top-k (Eq. 3/5, deterministic part).
+
+    logits: [T, E] float32 -> (weights [T,k], idx [T,k] int32, gates [T,E]).
+    """
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    gates = jnp.zeros_like(logits).at[
+        jnp.arange(logits.shape[0])[:, None], idx].set(w)
+    return w, idx.astype(jnp.int32), gates

@@ -1,0 +1,65 @@
+"""Fused top-k gating kernel (Eqs. 3/5, deterministic part).
+
+One pass over a [T_blk, E] logits tile in VMEM produces the top-k values
+and indices via k rounds of masked argmax (k <= 8 in every assigned arch)
+plus the softmax over the k survivors — fusing what XLA would otherwise
+lower as sort + gather + scatter + softmax with four HBM round-trips of the
+[T, E] logits.  E is small (<= 384 here) so a whole expert row fits a tile:
+a 256x384 f32 tile is 384 KiB of VMEM.
+
+Noise injection and the load estimator stay outside the kernel (they are
+bandwidth-trivial elementwise ops XLA already fuses well); the kernel
+covers the sort-like part that XLA lowers poorly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _topk_kernel(logits_ref, w_ref, idx_ref, *, k: int):
+    x = logits_ref[...].astype(jnp.float32)           # [T_blk, E]
+    t, e = x.shape
+    vals = []
+    idxs = []
+    work = x
+    for _ in range(k):
+        m = jnp.max(work, axis=-1)                    # [T_blk]
+        i = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        vals.append(m)
+        idxs.append(i)
+        work = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, (t, e), 1) == i[:, None],
+            NEG, work)
+    v = jnp.stack(vals, axis=-1)                      # [T_blk, k]
+    # softmax over the k kept entries (Eq. 3: Softmax(KeepTopK(...)))
+    mx = v[:, 0:1]                                    # top-1 is the max
+    p = jnp.exp(v - mx)
+    w_ref[...] = (p / jnp.sum(p, axis=-1, keepdims=True)).astype(
+        w_ref.dtype)
+    idx_ref[...] = jnp.stack(idxs, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t", "interpret"))
+def topk_gating(logits: jax.Array, k: int, *, block_t: int = 256,
+                interpret: bool = True):
+    """logits: [T, E] -> (weights [T, k] f32, indices [T, k] i32)."""
+    t, e = logits.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0, (t, block_t)
+    kernel = functools.partial(_topk_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // block_t,),
+        in_specs=[pl.BlockSpec((block_t, e), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+                   pl.BlockSpec((block_t, k), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((t, k), jnp.float32),
+                   jax.ShapeDtypeStruct((t, k), jnp.int32)),
+        interpret=interpret,
+    )(logits)

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before any other import — jax locks the device
+count at first backend init, and this driver (and ONLY this driver) needs
+512 placeholder CPU devices to build the production meshes.
+
+Per cell this:
+  1. builds abstract params / optimizer state / caches (ShapeDtypeStruct —
+     a 1T-param model is described, never allocated),
+  2. ``jit(step, in_shardings, out_shardings).lower().compile()``,
+  3. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline), and the collective
+     schedule parsed from the partitioned HLO,
+  4. appends a JSON line to the output file (resumable: existing cells are
+     skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             plan: str | None = None, overrides: dict | None = None) -> dict:
+    import jax
+    from repro.configs import shapes as shp
+    from repro.configs.base import get_config, count_params
+    from repro.launch import analytic as an
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.sharding import partition
+
+    cfg = get_config(arch, **(overrides or {}))
+    shape = shp.SHAPES[shape_name]
+    ok, why = shp.cell_supported(cfg, shape_name)
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "plan": plan, "kind": shape.kind,
+              "global_batch": shape.global_batch, "seq_len": shape.seq_len}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_dev = mesh.size
+    t0 = time.time()
+    lowered, spec = lower_cell(cfg, shape, mesh, plan=plan)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis())
+    hlo = compiled.as_text()
+    coll = rl.parse_collectives(hlo, n_dev)
+    params = count_params(cfg)
+    plan_name = plan or partition.plan_for(shape_name)
+    ana = an.analyze_cell(cfg, shape, mesh, plan_name)
+    record.update(
+        status="ok",
+        n_devices=n_dev,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        },
+        cost={k: v for k, v in cost.items()
+              if k in ("flops", "bytes accessed", "transcendentals")},
+        cost_caveat="XLA counts while-loop bodies once; use 'analytic'",
+        collectives=coll,
+        analytic={"flops_per_dev": ana.flops_per_dev,
+                  "hbm_bytes_per_dev": ana.hbm_bytes_per_dev,
+                  "wire_bytes_per_dev": ana.wire_bytes_per_dev,
+                  **ana.detail},
+        params=params,
+        sharding_fallbacks=[f"{s} axis={a} mesh_axis={x} dim={d}"
+                            for (s, a, x, d) in spec.fallbacks][:20],
+    )
+    roof = rl.analyze(record, cfg)
+    record["roofline"] = {
+        "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+        "collective_s": roof.collective_s, "dominant": roof.dominant,
+        "model_flops": roof.model_flops,
+        "useful_ratio": round(roof.useful_ratio, 4),
+        "roofline_fraction": round(rl.roofline_fraction(roof, n_dev), 4),
+    }
+    return record
+
+
+ALL_ARCHS = (
+    "pixtral-12b", "jamba-v0.1-52b", "kimi-k2-1t-a32b", "arctic-480b",
+    "qwen3-1.7b", "gemma3-27b", "smollm-135m", "llama3-8b",
+    "musicgen-large", "falcon-mamba-7b",
+)
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--plan", default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) for --mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("plan")))
+                except json.JSONDecodeError:
+                    pass
+
+    if args.all:
+        meshes = ["pod", "multipod"] if args.both_meshes else [args.mesh]
+        cells = [(a, s, m) for m in meshes for a in ALL_ARCHS
+                 for s in ALL_SHAPES]
+    else:
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape, mesh_kind in cells:
+        key = (arch, shape, mesh_kind, args.plan)
+        if key in done:
+            print(f"[dryrun] skip (done): {key}")
+            continue
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind} "
+              f"plan={args.plan or 'auto'} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, mesh_kind, plan=args.plan)
+        except Exception as e:  # record failures; they are bugs to fix
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "plan": args.plan, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"[dryrun] ERROR: {rec['error']}", flush=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        if rec.get("status") == "ok":
+            m = rec["analytic"]["resident_bytes_per_dev"] / 2**30
+            r = rec["roofline"]
+            print(f"[dryrun]   ok: {m:.2f} GiB/dev resident, "
+                  f"compute {r['compute_s']*1e3:.1f} ms, "
+                  f"memory {r['memory_s']*1e3:.1f} ms, "
+                  f"collective {r['collective_s']*1e3:.1f} ms "
+                  f"-> {r['dominant']}-bound "
+                  f"(compile {rec['compile_s']:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

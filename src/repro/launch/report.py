@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dryrun.jsonl.
+
+Usage: PYTHONPATH=src python -m repro.launch.report results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def load(path):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | status | resident GiB/dev | XLA peak GiB/dev "
+            "| collective ops (AR/AG/RS/A2A/CP) | compile s | fallbacks |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped "
+                        f"(sub-quadratic gate) | — | — | — | — | — |")
+            continue
+        if r["status"] == "error":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — "
+                        f"| — | {r['error'][:40]} |")
+            continue
+        c = r["collectives"]["op_counts"]
+        ops = (f"{c['all-reduce']}/{c['all-gather']}/"
+               f"{c['reduce-scatter']}/{c['all-to-all']}/"
+               f"{c['collective-permute']}")
+        nfb = len(r.get("sharding_fallbacks", []))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {fmt_bytes(r['analytic']['resident_bytes_per_dev'])} "
+            f"| {fmt_bytes(r['memory']['peak_bytes_per_device'])} "
+            f"| {ops} | {r['compile_s']:.0f} | {nfb} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="pod"):
+    rows = ["| arch | shape | compute ms | memory ms | collective ms "
+            "| dominant | MODEL_FLOPS | useful ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_ms(ro['compute_s'])} | {fmt_ms(ro['memory_s'])} "
+            f"| {fmt_ms(ro['collective_s'])} | **{ro['dominant']}** "
+            f"| {ro['model_flops']:.2e} | {ro['useful_ratio']:.2f} "
+            f"| {ro['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    er = [r for r in recs if r["status"] == "error"]
+    by_dom = {}
+    for r in ok:
+        if r["mesh"] == "pod":
+            d = r["roofline"]["dominant"]
+            by_dom[d] = by_dom.get(d, 0) + 1
+    return (f"{len(ok)} compiled ok, {len(sk)} skipped (sub-quadratic "
+            f"gate), {len(er)} errors; single-pod dominant terms: {by_dom}")
+
+
+def main():
+    paths = sys.argv[1:] or ["results/dryrun.jsonl"]
+    recs = []
+    for p in paths:
+        recs.extend(load(p))
+    # keep last record per cell (later files / re-runs win)
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"], r.get("plan"))] = r
+    recs = list(seen.values())
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Dry-run — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(recs, "pod"))
+    print("\n## Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(recs, "multipod"))
+    print("\n## Roofline — single pod\n")
+    print(roofline_table(recs, "pod"))
+
+
+if __name__ == "__main__":
+    main()

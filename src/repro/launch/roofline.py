@@ -1,0 +1,165 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) cell, from the SPMD-partitioned executable
+(everything below is **per device**, which is what XLA reports post-
+partitioning):
+
+    compute term    = HLO_FLOPs / peak_FLOP/s                 (197 TF bf16)
+    memory term     = HLO_bytes_accessed / HBM_bw             (819 GB/s)
+    collective term = wire_bytes(collectives) / link_bw       (50 GB/s)
+
+``cost_analysis`` has no collective traffic, so wire bytes are parsed from
+``compiled.as_text()``: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute line contributes its result shape scaled by
+the standard ring-algorithm factor for its replica-group size g:
+
+    all-reduce       2·(g-1)/g · result          (result == operand)
+    all-gather       (g-1)/g   · result          (result == full)
+    reduce-scatter   (g-1)     · result          (result == one shard)
+    all-to-all       (g-1)/g   · result
+    collective-perm  1         · result
+
+Also computes MODEL_FLOPS (6·N_active·tokens for training, 2·N_active·tokens
+for inference) and the MODEL_FLOPS / HLO_FLOPs ratio — the "useful compute"
+fraction that exposes remat recompute and padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, count_params
+from repro.launch.mesh import CHIP
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/]+\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes by collective kind (skips -done halves)."""
+    out = {k: 0.0 for k in _WIRE_FACTOR}
+    counts = {k: 0 for k in _WIRE_FACTOR}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue  # paired with the -start that carries the shape
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).lower()
+        nbytes = _shape_bytes(m.group(1))
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        out[kind] += nbytes * _WIRE_FACTOR[kind](g)
+        counts[kind] += 1
+    out_total = sum(out.values())
+    return {"wire_bytes_by_kind": out, "op_counts": counts,
+            "wire_bytes_total": out_total}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    bound_step_s: float
+
+
+def model_flops(cfg: ModelConfig, kind: str, global_batch: int,
+                seq_len: int) -> float:
+    """6·N_active·D (train) / 2·N_active·D (prefill) / 2·N_active·B (decode),
+    N_active excluding embeddings (the paper's ops/timestep convention)."""
+    n_active = count_params(cfg)["active_excl_embed"]
+    if kind == "train":
+        return 6.0 * n_active * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n_active * global_batch * seq_len
+    return 2.0 * n_active * global_batch           # decode: one token
+
+
+def analyze(record: dict, cfg: ModelConfig) -> Roofline:
+    """record: one dry-run JSONL entry (see launch/dryrun.py).
+
+    Prefers the analytic per-device numbers (correct across `while` loops)
+    when present; the raw XLA numbers stay in the record for reference.
+    """
+    n_dev = record["n_devices"]
+    if "analytic" in record:
+        flops_dev = record["analytic"]["flops_per_dev"]
+        bytes_dev = record["analytic"]["hbm_bytes_per_dev"]
+        wire = record["analytic"]["wire_bytes_per_dev"]
+    else:
+        flops_dev = record["cost"]["flops"]
+        bytes_dev = record["cost"].get("bytes accessed", 0.0)
+        wire = record["collectives"]["wire_bytes_total"]
+    compute_s = flops_dev / CHIP["peak_bf16_flops"]
+    memory_s = bytes_dev / CHIP["hbm_bandwidth"]
+    coll_s = wire / CHIP["ici_link_bandwidth"]
+    mf = model_flops(cfg, record["kind"], record["global_batch"],
+                     record["seq_len"])
+    useful = mf / max(flops_dev * n_dev, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(compute_s=compute_s, memory_s=memory_s,
+                    collective_s=coll_s, dominant=dominant,
+                    model_flops=mf, hlo_flops_per_dev=flops_dev,
+                    useful_ratio=useful,
+                    bound_step_s=max(terms.values()))
+
+
+def roofline_fraction(r: Roofline, n_devices: int) -> float:
+    """Achievable MFU under the bounding term: the fraction of peak compute
+    the *useful* model flops would sustain if the step ran exactly at the
+    dominant roofline term."""
+    ideal_s = r.model_flops / (n_devices * CHIP["peak_bf16_flops"])
+    return ideal_s / max(r.bound_step_s, 1e-30)

@@ -1,0 +1,62 @@
+"""Serving launcher: load (or init) a model and serve batched requests.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduce \
+      --requests 8 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.common import param as pm
+from repro.configs.base import get_config
+from repro.launch.train import reduced
+from repro.models import lm
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.train.checkpoint import CheckpointManager
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir to restore params from")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    if args.ckpt:
+        mgr = CheckpointManager(args.ckpt)
+        step = mgr.latest_step()
+        state_like = {"params": params}
+        restored, _, _ = mgr.restore(step, state_like)
+        params = restored["params"]
+        print(f"[serve] restored checkpoint step {step}")
+
+    engine = ServeEngine(params, cfg, ServeConfig(
+        max_len=args.prompt_len + args.new_tokens + 1,
+        temperature=args.temperature))
+    prompts = np.random.RandomState(0).randint(
+        1, cfg.vocab_size, (args.requests, args.prompt_len))
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new_tokens=args.new_tokens)
+    dt = time.perf_counter() - t0
+    total = out.size
+    print(f"[serve] {args.requests} requests x {out.shape[1]} tokens in "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s on this host)")
+    print(f"[serve] sample: {out[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

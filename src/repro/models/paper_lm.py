@@ -1,0 +1,170 @@
+"""The paper's language model (§C.1) and its computationally-matched baselines.
+
+Five layers: word embedding → LSTM → MoE (applied "convolutionally" over all
+timesteps, §3.1) → LSTM → softmax.  Residual connections around each
+non-softmax layer with dropout on the layer output; the MoE output passes
+through a sigmoid before dropout (§C.1).
+
+Variants (Appendix C baselines, Table 7):
+
+* ``moe``        — MoE-n with noisy-top-k gating (flat or hierarchical)
+* ``moe_1_wide`` — a single expert with one 4096-unit hidden layer
+* ``moe_1_deep`` — a single expert with four 1024-unit hidden layers
+* ``lstm_4x``    — MoE layer replaced by two more 512-unit LSTMs
+* ``lstm_2048_512`` — one 2048-unit LSTM with a 512-d output projection
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.common.param import ParamDef
+from repro.core import hierarchical as hmoe_lib
+from repro.core import moe as moe_lib
+from repro.models import layers, lstm as lstm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperLMConfig:
+    vocab_size: int
+    variant: str = "moe"            # moe | moe_1_wide | moe_1_deep |
+                                    # lstm_4x | lstm_2048_512
+    d_model: int = 512
+    n_experts: int = 4
+    k: int = 4                      # paper: k=4 flat, k=2 per level (hier.)
+    expert_hidden: int = 1024
+    hierarchical: tuple[int, int] | None = None
+    gating_mode: str = "noisy_topk"
+    capacity_factor: float = 2.0
+    w_importance: float = 0.1       # §C.1
+    w_load: float = 0.1
+    dropout: float = 0.1
+    dtype: Any = jnp.float32
+
+
+def _moe_args(cfg: PaperLMConfig) -> moe_lib.MoEArgs:
+    return moe_lib.MoEArgs(
+        n_experts=cfg.n_experts, k=cfg.k, d_model=cfg.d_model,
+        d_ff=cfg.expert_hidden, activation="relu",
+        gating_mode=cfg.gating_mode, capacity_factor=cfg.capacity_factor,
+        eval_capacity_factor=cfg.capacity_factor,
+        w_importance=cfg.w_importance, w_load=cfg.w_load,
+        sigmoid_output=True, dtype=cfg.dtype)
+
+
+def _hmoe_args(cfg: PaperLMConfig) -> hmoe_lib.HMoEArgs:
+    a, b = cfg.hierarchical
+    return hmoe_lib.HMoEArgs(
+        n_groups=a, n_experts_per_group=b, k_primary=2, k_secondary=2,
+        d_model=cfg.d_model, d_ff=cfg.expert_hidden, activation="relu",
+        capacity_factor=cfg.capacity_factor,
+        w_importance=cfg.w_importance, w_load=cfg.w_load, dtype=cfg.dtype)
+
+
+def paper_lm_defs(cfg: PaperLMConfig) -> dict:
+    d = cfg.d_model
+    defs: dict = {
+        "embed": layers.embed_defs(cfg.vocab_size, d, cfg.dtype),
+        "lstm1": lstm_lib.lstm_defs(d, d, dtype=cfg.dtype),
+        "lstm2": lstm_lib.lstm_defs(d, d, dtype=cfg.dtype),
+        "softmax": {"w": ParamDef((d, cfg.vocab_size),
+                                  ("embed_fsdp", "vocab"), dtype=cfg.dtype,
+                                  fan_in=d)},
+    }
+    if cfg.variant == "moe":
+        if cfg.hierarchical:
+            defs["moe"] = hmoe_lib.hmoe_defs(_hmoe_args(cfg))
+        else:
+            defs["moe"] = moe_lib.moe_defs(_moe_args(cfg))
+    elif cfg.variant == "moe_1_wide":
+        defs["mid"] = {
+            "w1": ParamDef((d, 4096), ("embed_fsdp", "mlp"), dtype=cfg.dtype),
+            "w2": ParamDef((4096, d), ("mlp", "embed_fsdp"), dtype=cfg.dtype),
+        }
+    elif cfg.variant == "moe_1_deep":
+        defs["mid"] = {"w0": ParamDef((d, 1024), ("embed_fsdp", "mlp"),
+                                      dtype=cfg.dtype)}
+        for i in range(3):
+            defs["mid"][f"w{i+1}"] = ParamDef(
+                (1024, 1024), ("mlp", "mlp2"), dtype=cfg.dtype)
+        defs["mid"]["w4"] = ParamDef((1024, d), ("mlp", "embed_fsdp"),
+                                     dtype=cfg.dtype)
+    elif cfg.variant == "lstm_4x":
+        defs["mid"] = {"lstm3": lstm_lib.lstm_defs(d, d, dtype=cfg.dtype),
+                       "lstm4": lstm_lib.lstm_defs(d, d, dtype=cfg.dtype)}
+    elif cfg.variant == "lstm_2048_512":
+        # Replaces lstm1/MoE/lstm2 stack semantics: one big projected LSTM.
+        defs["mid"] = {"big": lstm_lib.lstm_defs(d, 2048, d_proj=d,
+                                                 dtype=cfg.dtype)}
+    else:
+        raise ValueError(cfg.variant)
+    return defs
+
+
+def _mid_layer(params, x2d, cfg: PaperLMConfig, *, train, rng):
+    """The capacity layer between the LSTMs. x2d: [T, d]."""
+    zero_aux = {"aux_loss": jnp.zeros((), jnp.float32), "metrics": {}}
+    if cfg.variant == "moe":
+        if cfg.hierarchical:
+            return hmoe_lib.hmoe_apply(params["moe"], x2d, _hmoe_args(cfg),
+                                       train=train, rng=rng)
+        return moe_lib.moe_apply(params["moe"], x2d, _moe_args(cfg),
+                                 train=train, rng=rng)
+    if cfg.variant == "moe_1_wide":
+        h = jax.nn.relu(x2d @ params["mid"]["w1"])
+        return jax.nn.sigmoid(h @ params["mid"]["w2"]), zero_aux
+    if cfg.variant == "moe_1_deep":
+        h = x2d
+        for i in range(5):
+            h = h @ params["mid"][f"w{i}"]
+            if i < 4:
+                h = jax.nn.relu(h)
+        return jax.nn.sigmoid(h), zero_aux
+    raise ValueError(cfg.variant)
+
+
+def paper_lm_loss(params, batch, cfg: PaperLMConfig, *, rng=None,
+                  train: bool = True):
+    """batch: tokens/labels [B, S]. Returns (loss, metrics)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    rngs = (jax.random.split(rng, 4) if rng is not None else [None] * 4)
+    x = layers.embed(params["embed"], tokens, cfg.dtype)
+    x = layers.dropout(x, cfg.dropout, rngs[0], train)
+
+    aux = {"aux_loss": jnp.zeros((), jnp.float32), "metrics": {}}
+    if cfg.variant == "lstm_2048_512":
+        h, _ = lstm_lib.lstm(params["mid"]["big"], x)
+        x = x + layers.dropout(h, cfg.dropout, rngs[1], train)
+    else:
+        h, _ = lstm_lib.lstm(params["lstm1"], x)
+        x = x + layers.dropout(h, cfg.dropout, rngs[1], train)
+        if cfg.variant == "lstm_4x":
+            h, _ = lstm_lib.lstm(params["mid"]["lstm3"], x)
+            x = x + layers.dropout(h, cfg.dropout, rngs[2], train)
+            h, _ = lstm_lib.lstm(params["mid"]["lstm4"], x)
+            x = x + layers.dropout(h, cfg.dropout, rngs[2], train)
+        else:
+            # The MoE is applied convolutionally: all B*S positions as one
+            # big batch (§3.1 "Taking Advantage of Convolutionality").
+            y2d, aux = _mid_layer(params, x.reshape(b * s, -1), cfg,
+                                  train=train, rng=rngs[2])
+            x = x + layers.dropout(y2d.reshape(b, s, -1), cfg.dropout,
+                                   rngs[2], train)
+        h, _ = lstm_lib.lstm(params["lstm2"], x)
+        x = x + layers.dropout(h, cfg.dropout, rngs[3], train)
+
+    logits = (x @ params["softmax"]["w"]).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    xent = jnp.mean(lse - gold)
+    loss = xent + aux["aux_loss"]
+    metrics = {"xent": xent, "perplexity": jnp.exp(xent),
+               "aux_loss": aux["aux_loss"], "loss": loss,
+               **aux.get("metrics", {})}
+    return loss, metrics

@@ -1,0 +1,175 @@
+"""Mamba-1 selective state-space block (falcon-mamba / jamba mixers).
+
+TPU adaptation of the CUDA selective-scan kernel: the GPU implementation is a
+fused SRAM-resident recurrence; the TPU-native formulation here is a
+*chunked* scan — an outer ``lax.scan`` carries the [B, d_inner, d_state] SSM
+state across sequence chunks while an inner ``associative_scan`` (log-depth,
+MXU/VPU friendly) handles each chunk.  Memory per chunk is
+O(B · chunk · d_inner · d_state) instead of O(B · S · d_inner · d_state),
+which is what makes 500k-token sequences feasible (see DESIGN.md
+§Hardware-adaptation).
+
+Decode is the exact single-step recurrence with a (d_conv-1)-entry
+convolution state — O(1) per token, which is why the SSM archs run the
+``long_500k`` shape that pure-attention archs skip.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.sharding import partition
+
+
+def _dt_rank(d_model: int) -> int:
+    return -(-d_model // 16)   # ceil(d/16), mamba-1 default
+
+
+def mamba_defs(d_model: int, *, d_state: int, d_conv: int, expand: int,
+               dtype) -> dict:
+    d_in = expand * d_model
+    r = _dt_rank(d_model)
+    return {
+        "in_proj": ParamDef((d_model, 2 * d_in), ("embed_fsdp", "ssm_inner"),
+                            dtype=dtype, fan_in=d_model),
+        "conv_w": ParamDef((d_conv, d_in), ("conv", "ssm_inner"),
+                           dtype=dtype, fan_in=d_conv),
+        "conv_b": ParamDef((d_in,), ("ssm_inner",), init="zeros",
+                           dtype=dtype),
+        "x_proj": ParamDef((d_in, r + 2 * d_state), ("ssm_inner", None),
+                           dtype=dtype, fan_in=d_in),
+        "dt_proj": ParamDef((r, d_in), (None, "ssm_inner"), dtype=dtype,
+                            fan_in=r),
+        "dt_bias": ParamDef((d_in,), ("ssm_inner",), init="zeros",
+                            dtype=jnp.float32),
+        "a_log": ParamDef((d_in, d_state), ("ssm_inner", "ssm_state"),
+                          init="ones", dtype=jnp.float32),
+        "d_skip": ParamDef((d_in,), ("ssm_inner",), init="ones",
+                           dtype=jnp.float32),
+        "out_proj": ParamDef((d_in, d_model), ("ssm_inner", "embed_fsdp"),
+                             dtype=dtype, fan_in=d_in),
+    }
+
+
+def _ssm_inputs(params, u: jax.Array, d_state: int):
+    """Shared pre-scan computation. u: [B, L, d_in] (post conv+silu)."""
+    r = params["dt_proj"].shape[0]
+    dt_bc = jnp.einsum("bld,dr->blr", u,
+                       params["x_proj"].astype(u.dtype),
+                       preferred_element_type=jnp.float32)
+    dt, b_mat, c_mat = jnp.split(dt_bc, [r, r + d_state], axis=-1)
+    dt = jnp.einsum("blr,rd->bld", dt.astype(u.dtype),
+                    params["dt_proj"].astype(u.dtype),
+                    preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # [B, L, d_in] f32
+    a = -jnp.exp(params["a_log"])                          # [d_in, N] f32
+    da = jnp.exp(dt[..., None] * a)                        # [B, L, d_in, N]
+    dbx = (dt * u.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[:, :, None, :]           # [B, L, d_in, N]
+    return da, dbx, c_mat.astype(jnp.float32)
+
+
+def _conv1d(params, x: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv (kernel d_conv). x: [B, L, d_in]."""
+    d_conv = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    out = sum(xp[:, i:i + x.shape[1], :] *
+              w[i][None, None, :] for i in range(d_conv))
+    new_state = xp[:, -(d_conv - 1):, :] if d_conv > 1 else pad
+    return out + params["conv_b"].astype(x.dtype), new_state
+
+
+def mamba(params, x: jax.Array, *, d_state: int, chunk: int = 128,
+          return_state: bool = False):
+    """Training/prefill forward. x: [B, S, d_model] -> [B, S, d_model].
+
+    With ``return_state`` also returns {"ssm", "conv"} for decode handoff."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt),
+                    preferred_element_type=jnp.float32).astype(dt)
+    u, z = jnp.split(xz, 2, axis=-1)                      # [B, S, d_in] x2
+    u_raw = u
+    u, _ = _conv1d(params, u)
+    u = jax.nn.silu(u)
+    u = partition.with_constraint(u, partition.PLANS["dp_tp_ep"],
+                                  ("batch", None, "ssm_inner"))
+    d_in = u.shape[-1]
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    uc = u.reshape(b, n_chunks, chunk, d_in)
+
+    def chunk_step(h, u_chunk):
+        # h: [B, d_in, N] f32 carried state.
+        da, dbx, c_mat = _ssm_inputs(params, u_chunk, d_state)
+        # Inclusive associative scan within the chunk:
+        #   (a2, b2) ∘ (a1, b1) = (a1 a2, a2 b1 + b2)
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+        a_sc, b_sc = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = a_sc * h[:, None] + b_sc                  # [B, L, d_in, N]
+        y = jnp.einsum("blds,bls->bld", h_all, c_mat)
+        h_new = h_all[:, -1]
+        return h_new, y
+
+    h0 = jnp.zeros((b, d_in, d_state), jnp.float32)
+    h_final, yc = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                               uc.swapaxes(0, 1))
+    y = yc.swapaxes(0, 1).reshape(b, s, d_in)
+    y = y + params["d_skip"] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt),
+                     preferred_element_type=jnp.float32).astype(dt)
+    if return_state:
+        d_conv = params["conv_w"].shape[0]
+        conv_state = u_raw[:, -(d_conv - 1):, :]
+        return out, {"ssm": h_final, "conv": conv_state}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_state_defs(batch: int, d_model: int, *, d_state: int, d_conv: int,
+                    expand: int, dtype=jnp.float32) -> dict:
+    d_in = expand * d_model
+    return {
+        "ssm": ParamDef((batch, d_in, d_state),
+                        ("batch", "ssm_inner", "ssm_state"),
+                        init="zeros", dtype=jnp.float32),
+        "conv": ParamDef((batch, d_conv - 1, d_in),
+                         ("batch", "conv", "ssm_inner"),
+                         init="zeros", dtype=dtype),
+    }
+
+
+def mamba_decode(params, x: jax.Array, state: dict, *, d_state: int
+                 ) -> tuple[jax.Array, dict]:
+    """Single-token step. x: [B, 1, d_model] -> (y, new_state)."""
+    dt = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt),
+                    preferred_element_type=jnp.float32).astype(dt)
+    u, z = jnp.split(xz, 2, axis=-1)
+    u, conv_state = _conv1d(params, u, state["conv"])
+    u = jax.nn.silu(u)
+    da, dbx, c_mat = _ssm_inputs(params, u, d_state)     # L == 1
+    h = state["ssm"] * da[:, 0] + dbx[:, 0]              # [B, d_in, N]
+    y = jnp.einsum("bds,bs->bd", h, c_mat[:, 0])[:, None, :]
+    y = y + params["d_skip"] * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt)
+    y = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    return y, {"ssm": h, "conv": conv_state}

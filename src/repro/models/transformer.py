@@ -1,0 +1,302 @@
+"""Decoder blocks + the period-stacked layer scan.
+
+Layers repeat with a per-arch *period* (gemma3: 5 local + 1 global = 6;
+jamba: 7 mamba + 1 attn with MoE on odd positions = 8; homogeneous archs:
+1).  Parameters for each position-in-period are stacked across periods and
+the stack runs under one ``lax.scan`` — keeping HLO size O(period) instead
+of O(n_layers), which is what makes 61-64-layer models compile fast and
+lets one remat policy wrap the whole scan body (the paper's Appendix-D
+"recompute expert activations on the backward pass" falls out of this).
+Remainder layers (gemma3's 62 = 6·10 + 2) run unrolled as a tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import param as pm
+from repro.common.param import ParamDef
+from repro.configs.base import LayerKind, ModelConfig, layer_kinds, n_periods
+from repro.core import hierarchical as hmoe
+from repro.core import moe as moe_lib
+from repro.models import attention, layers, ssm
+
+
+def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
+    return moe_lib.MoEArgs(
+        n_experts=cfg.n_experts, k=cfg.moe_k, d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff, activation=cfg.activation,
+        gating_mode=cfg.gating_mode, capacity_factor=cfg.capacity_factor,
+        eval_capacity_factor=cfg.capacity_factor,
+        w_importance=cfg.w_importance, w_load=cfg.w_load,
+        dispatch_impl=cfg.dispatch_impl, expert_impl=cfg.expert_impl,
+        wide_dispatch=cfg.moe_wide_dispatch, dtype=cfg.param_dtype)
+
+
+def _hmoe_args(cfg: ModelConfig) -> hmoe.HMoEArgs:
+    a, b = cfg.moe_hierarchical
+    return hmoe.HMoEArgs(
+        n_groups=a, n_experts_per_group=b, k_primary=cfg.moe_k,
+        k_secondary=cfg.moe_k, d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
+        activation=cfg.activation, capacity_factor=cfg.capacity_factor,
+        w_importance=cfg.w_importance, w_load=cfg.w_load,
+        dtype=cfg.param_dtype)
+
+
+def block_defs(cfg: ModelConfig, kind: LayerKind) -> dict:
+    defs: dict = {"ln1": layers.rmsnorm_defs(cfg.d_model)}
+    if kind.mixer in ("attn", "attn_local"):
+        defs["attn"] = attention.attention_defs(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, dtype=cfg.param_dtype)
+    else:
+        defs["mamba"] = ssm.mamba_defs(
+            cfg.d_model, d_state=cfg.ssm_d_state, d_conv=cfg.ssm_d_conv,
+            expand=cfg.ssm_expand, dtype=cfg.param_dtype)
+    if kind.ffn != "none":
+        defs["ln2"] = layers.rmsnorm_defs(cfg.d_model)
+    if kind.ffn in ("moe", "moe+dense"):
+        if cfg.moe_hierarchical:
+            defs["moe"] = hmoe.hmoe_defs(_hmoe_args(cfg))
+        else:
+            defs["moe"] = moe_lib.moe_defs(_moe_args(cfg))
+    if kind.ffn in ("dense", "moe+dense"):
+        defs["mlp"] = layers.mlp_defs(cfg.d_model, cfg.d_ff, cfg.activation,
+                                      cfg.param_dtype)
+    return defs
+
+
+_ZERO_METRICS = ("cv_importance", "cv_load", "max_over_mean_load",
+                 "fraction_dropped")
+
+
+def _zero_aux():
+    return {"aux_loss": jnp.zeros((), jnp.float32),
+            "metrics": {k: jnp.zeros((), jnp.float32)
+                        for k in _ZERO_METRICS},
+            "n_moe": jnp.zeros((), jnp.float32)}
+
+
+def _add_aux(acc, aux):
+    return {"aux_loss": acc["aux_loss"] + aux["aux_loss"],
+            "metrics": {k: acc["metrics"][k] + aux["metrics"][k]
+                        for k in _ZERO_METRICS},
+            "n_moe": acc["n_moe"] + 1.0}
+
+
+def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng):
+    """Post-mixer FFN with residual. x: [B, S, d]."""
+    if kind.ffn == "none":
+        return x, None
+    h = layers.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    out = x
+    aux = None
+    if kind.ffn in ("moe", "moe+dense"):
+        b, s, d = h.shape
+        flat = h.reshape(b * s, d)
+        if cfg.moe_hierarchical:
+            y, aux = hmoe.hmoe_apply(params["moe"], flat, _hmoe_args(cfg),
+                                     train=train, rng=rng)
+        else:
+            y, aux = moe_lib.moe_apply(params["moe"], flat, _moe_args(cfg),
+                                       train=train, rng=rng)
+        out = out + y.reshape(b, s, d)
+    if kind.ffn in ("dense", "moe+dense"):
+        out = out + layers.mlp(params["mlp"], h, cfg.activation)
+    return out, aux
+
+
+def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
+                positions, rng, train: bool):
+    """Train/prefill block. Returns (x, aux)."""
+    h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind.mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if kind.mixer == "attn_local" else 0
+        y = attention.attention(params["attn"], h, positions,
+                                rope_theta=cfg.rope_theta,
+                                qk_norm=cfg.qk_norm, window=window,
+                                q_block=cfg.q_block, kv_block=cfg.kv_block,
+                                pad_heads=cfg.pad_attn_heads)
+    else:
+        y = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state)
+    x = x + y
+    x, aux = _apply_ffn(params, x, kind, cfg, train=train, rng=rng)
+    return x, aux
+
+
+def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
+                  positions):
+    """Prefill block: causal attention + cache fill. Returns (x, cache)."""
+    h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind.mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if kind.mixer == "attn_local" else 0
+        y, new_cache = attention.prefill_attention(
+            params["attn"], h, positions, rope_theta=cfg.rope_theta,
+            qk_norm=cfg.qk_norm, cache=cache, window=window,
+            q_block=cfg.q_block, kv_block=cfg.kv_block)
+    else:
+        y, new_cache = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state,
+                                 return_state=True)
+    x = x + y
+    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None)
+    return x, new_cache
+
+
+def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
+                 cur_index):
+    """One-token decode block. Returns (x, new_cache)."""
+    h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if kind.mixer in ("attn", "attn_local"):
+        window = cfg.sliding_window if kind.mixer == "attn_local" else 0
+        y, new_cache = attention.decode_attention(
+            params["attn"], h, cache, cur_index,
+            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm, window=window)
+    else:
+        y, new_cache = ssm.mamba_decode(params["mamba"], h, cache,
+                                        d_state=cfg.ssm_d_state)
+    x = x + y
+    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Period-stacked layer stack
+# ---------------------------------------------------------------------------
+
+def _stack_tree(tree, n: int):
+    """Prepend a stacked 'layers' axis of size n to every ParamDef."""
+    def one(d: ParamDef):
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes,
+                        init=d.init, dtype=d.dtype, fan_in=d.fan_in)
+    return jax.tree_util.tree_map(one, tree, is_leaf=pm.is_def)
+
+
+def stack_defs(cfg: ModelConfig) -> dict:
+    kinds = layer_kinds(cfg)
+    full, rem = n_periods(cfg)
+    defs: dict = {}
+    if full:
+        defs["periods"] = {
+            f"pos{p}": _stack_tree(block_defs(cfg, kinds[p]), full)
+            for p in range(cfg.period)}
+    if rem:
+        defs["tail"] = {f"pos{p}": block_defs(cfg, kinds[p % cfg.period])
+                        for p in range(rem)}
+    return defs
+
+
+def stack_apply(params, x, cfg: ModelConfig, *, positions, rng,
+                train: bool):
+    """Run all layers. Returns (x, summed aux)."""
+    kinds = layer_kinds(cfg)
+    full, rem = n_periods(cfg)
+    aux0 = _zero_aux()
+
+    def period_body(carry, xs):
+        x, aux = carry
+        period_params, idx = xs
+        for p in range(cfg.period):
+            sub = (jax.random.fold_in(rng, idx * cfg.period + p)
+                   if rng is not None else None)
+            x, a = block_apply(period_params[f"pos{p}"], x, kinds[p], cfg,
+                               positions=positions, rng=sub, train=train)
+            if a is not None:
+                aux = _add_aux(aux, a)
+        return (x, aux), None
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    if full:
+        (x, aux0), _ = jax.lax.scan(
+            body, (x, aux0),
+            (params["periods"], jnp.arange(full)))
+    for p in range(rem):
+        sub = (jax.random.fold_in(rng, full * cfg.period + p)
+               if rng is not None else None)
+        x, a = block_apply(params["tail"][f"pos{p}"], x,
+                           kinds[p % cfg.period], cfg,
+                           positions=positions, rng=sub, train=train)
+        if a is not None:
+            aux0 = _add_aux(aux0, a)
+    return x, aux0
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode-cache ParamDefs matching the stacked parameter structure."""
+    kinds = layer_kinds(cfg)
+    full, rem = n_periods(cfg)
+
+    def one(kind: LayerKind):
+        if kind.mixer in ("attn", "attn_local"):
+            window = cfg.sliding_window if kind.mixer == "attn_local" else 0
+            return attention.init_cache_defs(
+                batch, max_len, cfg.n_kv_heads, cfg.head_dim, window=window,
+                dtype=cfg.param_dtype)
+        return ssm.init_state_defs(batch, cfg.d_model,
+                                   d_state=cfg.ssm_d_state,
+                                   d_conv=cfg.ssm_d_conv,
+                                   expand=cfg.ssm_expand,
+                                   dtype=cfg.param_dtype)
+
+    defs: dict = {}
+    if full:
+        defs["periods"] = {f"pos{p}": _stack_tree(one(kinds[p]), full)
+                           for p in range(cfg.period)}
+    if rem:
+        defs["tail"] = {f"pos{p}": one(kinds[p % cfg.period])
+                        for p in range(rem)}
+    return defs
+
+
+def stack_prefill(params, x, cfg: ModelConfig, cache, positions):
+    """Prefill all layers, filling the cache. Returns (x, new_cache)."""
+    kinds = layer_kinds(cfg)
+    full, rem = n_periods(cfg)
+    new_cache: dict = {}
+
+    def period_body(x, xs):
+        period_params, period_cache = xs
+        out_cache = {}
+        for p in range(cfg.period):
+            x, out_cache[f"pos{p}"] = block_prefill(
+                period_params[f"pos{p}"], x, kinds[p], cfg,
+                period_cache[f"pos{p}"], positions)
+        return x, out_cache
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    if full:
+        x, new_cache["periods"] = jax.lax.scan(
+            body, x, (params["periods"], cache["periods"]))
+    if rem:
+        new_cache["tail"] = {}
+        for p in range(rem):
+            x, new_cache["tail"][f"pos{p}"] = block_prefill(
+                params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
+                cache["tail"][f"pos{p}"], positions)
+    return x, new_cache
+
+
+def stack_decode(params, x, cfg: ModelConfig, cache, cur_index):
+    """One-token decode through all layers. Returns (x, new_cache)."""
+    kinds = layer_kinds(cfg)
+    full, rem = n_periods(cfg)
+    new_cache: dict = {}
+
+    def period_body(x, xs):
+        period_params, period_cache = xs
+        out_cache = {}
+        for p in range(cfg.period):
+            x, out_cache[f"pos{p}"] = block_decode(
+                period_params[f"pos{p}"], x, kinds[p], cfg,
+                period_cache[f"pos{p}"], cur_index)
+        return x, out_cache
+
+    if full:
+        x, new_cache["periods"] = jax.lax.scan(
+            period_body, x, (params["periods"], cache["periods"]))
+    if rem:
+        new_cache["tail"] = {}
+        for p in range(rem):
+            x, new_cache["tail"][f"pos{p}"] = block_decode(
+                params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
+                cache["tail"][f"pos{p}"], cur_index)
+    return x, new_cache

@@ -1,0 +1,155 @@
+"""Optimizers: Adam and the paper's memory-factored variant (Appendix D).
+
+The paper trained its 137B-parameter MoE with a modified Adam: β1 = 0 (no
+first moment) and, for matrix parameters, the full second-moment estimator
+replaced by the outer product of row-wise and column-wise running averages
+divided by the mean of either — the direct ancestor of Adafactor.  That is
+``kind="factored"`` here, and it is what lets a 1T-param model keep optimizer
+state at ~1/10,000th of Adam's.
+
+Learning-rate schedule (§C.1): linear warmup then inverse-sqrt decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "factored"        # adam | factored
+    learning_rate: float = 1e-3
+    warmup_steps: int = 1000      # paper: 1000 (LM) / 2000 (MT)
+    b1: float = 0.9               # adam only; factored uses b1=0 (App. D)
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    weight_decay: float = 0.0
+    factored_min_rank: int = 2    # factor matrices and higher-rank tensors
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup, then proportional to 1/sqrt(step) (§C.1)."""
+    step = jnp.maximum(step, 1).astype(jnp.float32)
+    w = jnp.asarray(float(oc.warmup_steps), jnp.float32)
+    warm = step / w
+    decay = jnp.sqrt(w) / jnp.sqrt(step)
+    return oc.learning_rate * jnp.minimum(warm, decay)
+
+
+def _is_factored(x, oc: OptConfig) -> bool:
+    return x.ndim >= oc.factored_min_rank and oc.kind == "factored"
+
+
+def init(params, oc: OptConfig):
+    def one(p):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return {}
+        if _is_factored(p, oc):
+            # Row/col second-moment averages over the last two dims; leading
+            # dims (stacked layers / experts) are carried elementwise.
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        state = {"v": jnp.zeros(p.shape, jnp.float32)}
+        if oc.kind == "adam" and oc.b1 > 0:
+            state["m"] = jnp.zeros(p.shape, jnp.float32)
+        return state
+    return {"mu": jax.tree_util.tree_map(one, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(jnp.asarray(g, jnp.float32)))
+              for g in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params, grads, state, oc: OptConfig):
+    """Returns (new_params, new_state, info)."""
+    step = state["step"] + 1
+    lr = schedule(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if oc.clip_norm > 0 else 1.0
+
+    def one(p, g, s):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, s
+        g = jnp.asarray(g, jnp.float32) * scale
+        if _is_factored(p, oc):
+            g2 = g * g + 1e-30
+            vr = oc.b2 * s["vr"] + (1 - oc.b2) * jnp.mean(g2, axis=-1)
+            vc = oc.b2 * s["vc"] + (1 - oc.b2) * jnp.mean(g2, axis=-2)
+            # Appendix D: estimator = outer(vr, vc) / mean(vr).
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1,
+                                       keepdims=True)[..., None], 1e-30))
+            upd = g / jnp.maximum(denom, oc.eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = oc.b2 * s["v"] + (1 - oc.b2) * g * g
+            vh = v / (1 - oc.b2 ** step.astype(jnp.float32))
+            upd = g / (jnp.sqrt(vh) + oc.eps)
+            new_s = {"v": v}
+            if "m" in s:
+                m = oc.b1 * s["m"] + (1 - oc.b1) * g
+                upd = (m / (1 - oc.b1 ** step.astype(jnp.float32))) \
+                    / (jnp.sqrt(vh) + oc.eps)
+                new_s["m"] = m
+        if oc.weight_decay:
+            upd = upd + oc.weight_decay * jnp.asarray(p, jnp.float32)
+        new_p = (jnp.asarray(p, jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, new_s
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+    out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def state_bytes(state) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(state))
+
+
+def state_defs(param_defs, oc: OptConfig):
+    """ParamDef tree for the optimizer state (for abstract dry-run lowering).
+
+    Factored row/col estimators inherit the parameter's logical axes minus
+    the reduced dimension, so they shard exactly like their parameter.
+    """
+    from repro.common import param as pm
+
+    def one(d: pm.ParamDef):
+        if _is_factored_shape(d.shape, oc):
+            return {
+                "vr": pm.ParamDef(d.shape[:-1], d.axes[:-1], init="zeros",
+                                  dtype=jnp.float32),
+                "vc": pm.ParamDef(d.shape[:-2] + d.shape[-1:],
+                                  d.axes[:-2] + d.axes[-1:], init="zeros",
+                                  dtype=jnp.float32),
+            }
+        state = {"v": pm.ParamDef(d.shape, d.axes, init="zeros",
+                                  dtype=jnp.float32)}
+        if oc.kind == "adam" and oc.b1 > 0:
+            state["m"] = pm.ParamDef(d.shape, d.axes, init="zeros",
+                                     dtype=jnp.float32)
+        return state
+
+    mu = jax.tree_util.tree_map(one, param_defs, is_leaf=pm.is_def)
+    return {"mu": mu, "step": pm.ParamDef((), (), init="zeros",
+                                          dtype=jnp.int32)}
+
+
+def _is_factored_shape(shape, oc: OptConfig) -> bool:
+    return len(shape) >= oc.factored_min_rank and oc.kind == "factored"

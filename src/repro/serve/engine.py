@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with a fixed slot pool.
+
+Continuous-batching-lite: the engine owns ``batch_size`` sequence slots.
+``generate`` prefills a batch of prompts (right-aligned padding-free — all
+prompts padded to the same length with position masking via the causal
+mask) and then runs jitted single-token decode steps, sampling with
+temperature / greedy.  Finished sequences (EOS or length) keep decoding
+into dead slots until the batch drains — the standard static-batch serving
+pattern; slot recycling across batches is the Trainer-side loop's job.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import param as pm
+from repro.configs.base import ModelConfig
+from repro.models import lm, transformer
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0     # 0 => greedy
+    eos_id: int = -1             # -1 => never stop early
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, sc: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.sc = sc
+        self._prefill = jax.jit(
+            lambda p, b, c: lm.lm_prefill(p, b, c, cfg))
+        self._decode = jax.jit(
+            lambda p, t, c, i: lm.lm_decode(p, t, c, i, cfg))
+
+    def _sample(self, logits: jax.Array, rng) -> jax.Array:
+        if self.sc.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int
+                 ) -> np.ndarray:
+        """prompts: [B, S0] int32 (same length). Returns [B, new] tokens."""
+        b, s0 = prompts.shape
+        cache = pm.materialize(
+            transformer.cache_defs(self.cfg, b, self.sc.max_len),
+            jax.random.PRNGKey(0))
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts, jnp.int32)}, cache)
+        rng = jax.random.PRNGKey(self.sc.seed)
+        out = []
+        tok = self._sample(logits, rng)
+        done = np.zeros((b,), bool)
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            if self.sc.eos_id >= 0:
+                done |= np.asarray(tok) == self.sc.eos_id
+                if done.all():
+                    break
+            if i == max_new_tokens - 1:
+                break
+            rng, sub = jax.random.split(rng)
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(s0 + i))
+            tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)

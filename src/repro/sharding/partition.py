@@ -1,0 +1,311 @@
+"""Logical-axis → mesh-axis resolution (MaxText-style sharding rules).
+
+Every parameter/activation dimension carries a *logical* name ("embed",
+"experts", "batch", …).  A :class:`ShardingRules` table maps each logical
+name to zero or more mesh axes.  Resolution enforces divisibility: if a
+dimension is not divisible by the product of its assigned mesh axes we fall
+back to progressively fewer axes (and finally to replication) rather than
+failing the compile — the fallback is recorded so the dry-run can report it.
+
+Plans
+-----
+``PLANS`` holds named rule-sets:
+
+* ``dp_tp_ep``     — batch over (pod, data); tensor-parallel + expert-parallel
+                     over model; FSDP of params over data.  The default, and
+                     the modern mapping of the paper's "data-parallel standard
+                     layers + model-parallel experts" scheme (§3.1).
+* ``dp_only``      — pure data parallel (small models / baselines).
+* ``decode_long``  — long-context decode: batch cannot shard (B=1), so the KV
+                     cache / SSM sequence axis shards over data instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import param as pm
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> tuple of mesh axis names (in priority order)."""
+    table: Mapping[str, tuple[str, ...]]
+    name: str = "custom"
+
+    def lookup(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.table.get(logical, ()))
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def resolve_spec(
+    rules: ShardingRules,
+    mesh: Mesh,
+    shape: Sequence[int],
+    logical_axes: Sequence,
+    fallbacks: list | None = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec, enforcing divisibility.
+
+    Mesh axes already claimed by an earlier dimension of the same tensor are
+    skipped (XLA forbids reusing a mesh axis within one PartitionSpec).
+    """
+    used: set[str] = set()
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        want = [a for a in rules.lookup(logical)
+                if a in mesh.shape and a not in used]
+        # Largest prefix of `want` whose product divides dim.
+        chosen: list[str] = []
+        prod = 1
+        for a in want:
+            if dim % (prod * _mesh_axis_size(mesh, a)) == 0:
+                chosen.append(a)
+                prod *= _mesh_axis_size(mesh, a)
+            else:
+                if fallbacks is not None:
+                    fallbacks.append((tuple(shape), logical, a, dim))
+                break
+        used.update(chosen)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    return P(*out)
+
+
+def tree_shardings(rules: ShardingRules, mesh: Mesh, def_tree,
+                   fallbacks: list | None = None):
+    """NamedSharding tree for a ParamDef tree."""
+    def one(d: pm.ParamDef):
+        spec = resolve_spec(rules, mesh, d.shape, d.axes, fallbacks)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(one, def_tree, is_leaf=pm.is_def)
+
+
+def tree_pspecs(rules: ShardingRules, mesh: Mesh, def_tree,
+                fallbacks: list | None = None):
+    """PartitionSpec tree for a ParamDef tree (for shard_map in_specs)."""
+    def one(d: pm.ParamDef):
+        return resolve_spec(rules, mesh, d.shape, d.axes, fallbacks)
+    return jax.tree_util.tree_map(one, def_tree, is_leaf=pm.is_def)
+
+
+def shd(rules: ShardingRules, mesh: Mesh, shape, axes,
+        fallbacks: list | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(rules, mesh, shape, axes,
+                                            fallbacks))
+
+
+def with_constraint(x, rules: ShardingRules, logical_axes):
+    """Apply a logical sharding constraint inside jit (no-op off-mesh).
+
+    Axes the surrounding shard_map holds in Manual mode (e.g. the pipeline
+    stage axis) are stripped from the spec — inside a stage body only the
+    Auto axes are GSPMD's to place."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_spec(rules, mesh, x.shape, logical_axes)
+    manual = {name for name, t in getattr(mesh, "_name_to_type",
+                                          {}).items()
+              if str(t) == "AxisType.Manual"}
+    if manual:
+        def strip(entry):
+            if entry is None:
+                return None
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            kept = tuple(a for a in axes if a not in manual)
+            if not kept:
+                return None
+            return kept if len(kept) > 1 else kept[0]
+        spec = P(*(strip(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Named plans
+# ---------------------------------------------------------------------------
+
+def _plan(name, **table):
+    return ShardingRules(table=table, name=name)
+
+
+PLANS: dict[str, ShardingRules] = {
+    # The workhorse: DP over (pod,data), TP/EP over model, FSDP over data.
+    "dp_tp_ep": _plan(
+        "dp_tp_ep",
+        batch=("pod", "data"),
+        # flattened token dim inside the MoE: sharded over EVERY axis —
+        # the paper's §3.1 combined-batch trick (each expert's batch comes
+        # from all data-parallel replicas; entry reshard is a free slice,
+        # exit is one all-gather over model, and the k-way a2a shrinks by M).
+        tokens=("pod", "data", "model"),
+        seq=(),                    # sequence replicated in train/prefill
+        kv_seq=(),                 # cache length replicated (short contexts)
+        embed=(),                  # d_model activations replicated
+        embed_fsdp=("data",),      # d_model *param* dim -> FSDP over data
+        vocab=("model",),
+        heads=("model",),
+        kv_heads=("model",),
+        head_dim=(),
+        mlp=("model",),            # d_ff tensor-parallel
+        experts=("model",),        # expert-parallel (paper §3.1)
+        expert_capacity=(),
+        expert_embed=(),           # expert d_model: unsharded (weights stay)
+        expert_mlp=("data",),      # TP-within-expert over data: no per-
+                                   # microbatch weight gathers (cf. FSDP)
+        expert_groups=("model",),  # hierarchical MoE primary branch
+        ssm_inner=("model",),      # mamba d_inner tensor-parallel
+        ssm_state=(),
+        conv=(),
+        layers=(),                 # stacked-layer leading axis never sharded
+    ),
+    # Baseline variant for §Perf: experts FSDP over data (ZeRO-3-style
+    # per-microbatch weight gathers) instead of expert-TP.  Measurably
+    # collective-bound for kimi-k2; kept for the before/after comparison.
+    "dp_fsdp_ep": _plan(
+        "dp_fsdp_ep",
+        batch=("pod", "data"),
+        tokens=("pod", "data", "model"),
+        seq=(), kv_seq=(),
+        embed=(),
+        embed_fsdp=("data",),
+        vocab=("model",),
+        heads=("model",), kv_heads=("model",), head_dim=(),
+        mlp=("model",),
+        experts=("model",),
+        expert_capacity=("data",),
+        expert_embed=("data",),    # ZeRO-3 experts
+        expert_mlp=(),
+        expert_groups=("model",),
+        ssm_inner=("model",), ssm_state=(), conv=(), layers=(),
+    ),
+    # Pure data-parallel (paper's small baselines, CPU smoke tests).
+    "dp_only": _plan(
+        "dp_only",
+        batch=("pod", "data", "model"),
+        embed_fsdp=(),
+        vocab=(), heads=(), kv_heads=(), mlp=(), experts=(),
+        expert_mlp=(), expert_groups=(), ssm_inner=(),
+    ),
+    # Prefill: like dp_tp_ep but the MoE dispatch buffer's capacity axis
+    # shards over data (a 1M-token prefill dispatch buffer is ~150 GB for
+    # kimi-k2; train avoids this via microbatching, prefill cannot).
+    "prefill_tp": _plan(
+        "prefill_tp",
+        batch=("pod", "data"),
+        tokens=("pod", "data", "model"),
+        seq=(), kv_seq=(),
+        embed=(),
+        embed_fsdp=("data",),
+        vocab=("model",),
+        heads=("model",), kv_heads=("model",), head_dim=(),
+        mlp=("model",),
+        experts=("model",),
+        expert_capacity=("data",),
+        expert_embed=(),
+        expert_mlp=("data",),      # weights must shard over data too (a
+                                   # 2 TB expert set cannot live 16-way)
+        expert_groups=("model",),
+        ssm_inner=("model",), ssm_state=(), conv=(), layers=(),
+    ),
+    # Small-model plan: no tensor parallelism at all — batch shards over
+    # every axis, parameters replicated for compute (FSDP storage over
+    # data).  The §Perf fix for archs whose head counts cannot split the
+    # model axis (smollm's 9 heads).
+    "dp_wide": _plan(
+        "dp_wide",
+        batch=("pod", "data", "model"),
+        tokens=("pod", "data", "model"),
+        seq=(), kv_seq=(),
+        embed=(),
+        embed_fsdp=("data",),
+        vocab=(),
+        heads=(), kv_heads=(), head_dim=(),
+        mlp=(),
+        experts=(),
+        expert_capacity=("data", "model"),
+        expert_embed=(), expert_mlp=(),
+        expert_groups=(),
+        ssm_inner=(), ssm_state=(), conv=(), layers=(),
+    ),
+    # Standard decode (decode_32k): weight-gathering FSDP is wrong for
+    # decode (one gather per generated token), so weights live sharded:
+    # experts over model + within-expert d_ff tensor-parallel over data.
+    # KV caches shard batch over (pod,data) and sequence over model
+    # (flash-decoding style; GQA kv_heads often don't divide the model
+    # axis, the sequence always does).
+    "decode_std": _plan(
+        "decode_std",
+        batch=("pod", "data"),
+        tokens=("pod", "data"),
+        seq=(),
+        kv_seq=("model",),
+        embed=(),
+        embed_fsdp=(),
+        vocab=("model",),
+        heads=("model",),
+        kv_heads=(),
+        head_dim=(),
+        mlp=("model",),
+        experts=("model",),
+        expert_capacity=(),
+        expert_embed=(),
+        expert_mlp=("data",),      # TP-within-expert instead of FSDP
+        expert_groups=("model",),
+        ssm_inner=("model",),
+        ssm_state=(),
+        conv=(),
+        layers=(),
+    ),
+    # Long-context decode: B=1 cannot shard; shard the cache sequence axis
+    # over (data, model) instead.
+    "decode_long": _plan(
+        "decode_long",
+        batch=(),
+        tokens=(),
+        seq=(),
+        kv_seq=("data", "model"),
+        embed=(),
+        embed_fsdp=(),
+        vocab=("model",),
+        heads=("model",),
+        kv_heads=(),
+        head_dim=(),
+        mlp=("model",),
+        experts=("model",),
+        expert_capacity=(),
+        expert_embed=(),
+        expert_mlp=("data",),
+        expert_groups=("model",),
+        ssm_inner=("model",),
+        ssm_state=(),
+        conv=(),
+        layers=(),
+    ),
+}
+
+
+def plan_for(shape_name: str) -> str:
+    """Pick the sharding plan for a named input-shape kind."""
+    if shape_name.startswith("long"):
+        return "decode_long"
+    if shape_name.startswith("decode"):
+        return "decode_std"
+    if shape_name.startswith("prefill"):
+        return "prefill_tp"
+    return "dp_tp_ep"

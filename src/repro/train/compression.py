@@ -1,0 +1,64 @@
+"""Error-feedback int8 gradient compression for slow (cross-pod) links.
+
+At 1000+-node scale the cross-pod / DCN links are the bottleneck for the
+data-parallel gradient reduction, not the in-pod ICI.  The classic recipe
+(1-bit Adam / EF-SGD lineage):
+
+    e_t   = g_t + ef_{t-1}              (add residual from last step)
+    q_t   = int8_quantize(e_t)          (per-tensor scale)
+    ef_t  = e_t - dequant(q_t)          (store the quantization error)
+    sync  = mean over pods of dequant(q_t)
+
+The collective is an ``all_gather`` of int8 payloads + f32 scales followed
+by a local dequantized mean.  On the wire this moves (n-1)·size/4 bytes per
+device versus ring all-reduce's 2·(n-1)/n·size — a 4x reduction for n=2
+pods and a win for any n < 8, exactly the cross-pod regime it targets.
+Error feedback makes the *accumulated* update unbiased: the quantization
+error of step t is replayed into step t+1, so compression noise does not
+bias the trajectory (tested in tests/test_compression.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    xf = jnp.asarray(x, jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_sync(grads, ef_state, axis_name: str):
+    """Inside shard_map: synchronize `grads` over `axis_name` with int8 EF.
+
+    Returns (synced_grads, new_ef_state).  ef_state is a float32 tree
+    matching grads (zeros at step 0).
+    """
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g, ef):
+        e = jnp.asarray(g, jnp.float32) + ef
+        q, scale = quantize_int8(e)
+        new_ef = e - dequantize_int8(q, scale)
+        q_all = jax.lax.all_gather(q, axis_name)           # int8 on the wire
+        s_all = jax.lax.all_gather(scale, axis_name)
+        mean = jnp.sum(q_all.astype(jnp.float32)
+                       * s_all.reshape((n,) + (1,) * g.ndim), axis=0) / n
+        return mean.astype(g.dtype), new_ef
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))
+
+
+def init_ef_state(grads_like):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

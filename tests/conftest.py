@@ -1,0 +1,36 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+only launch/dryrun.py forces 512 placeholder devices.  Multi-device tests
+spawn subprocesses with their own XLA_FLAGS (see test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def small_config(name: str, **overrides):
+    """Reduced config of the same family (the assigned smoke-test shape)."""
+    from repro.configs.base import get_config
+    cfg = get_config(name)
+    kw = dict(
+        n_layers=(2 * cfg.period + 1) if cfg.period > 1 else 2,
+        d_model=64, vocab_size=256,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        q_block=32, kv_block=32)
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=2, head_dim=16)
+    if cfg.d_ff:
+        kw.update(d_ff=96)
+    if cfg.n_experts:
+        kw.update(n_experts=4, moe_k=2, moe_d_ff=32)
+    if cfg.ssm_d_state:
+        kw.update(ssm_d_state=4)
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    if cfg.n_prefix:
+        kw.update(n_prefix=4)
+    kw.update(overrides)
+    return cfg.replace(**kw)

@@ -1,0 +1,82 @@
+"""Dispatch/combine invariants (capacity semantics, sort == einsum)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch as dsp
+
+
+def _random_assignment(t, e, k, seed):
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.randint(key, (t, k), 0, e)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                         (t, k)), axis=-1)
+    return idx.astype(jnp.int32), w
+
+
+@settings(deadline=None, max_examples=25)
+@given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
+       cf=st.floats(0.5, 4.0), seed=st.integers(0, 100))
+def test_sort_equals_einsum(t, e, k, cf, seed):
+    idx, w = _random_assignment(t, e, k, seed)
+    cap = dsp.capacity_for(t, e, k, cf)
+    p = dsp.plan(idx, w, e, cap)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 2), (t, 8))
+    np.testing.assert_allclose(np.asarray(dsp.dispatch(x, p)),
+                               np.asarray(dsp.dispatch_einsum(x, p)),
+                               rtol=1e-5, atol=1e-6)
+    out = jax.random.normal(jax.random.PRNGKey(seed + 3), p.expert_index
+                            .shape[:0] + (e, cap, 8))
+    np.testing.assert_allclose(np.asarray(dsp.combine(out, p)),
+                               np.asarray(dsp.combine_einsum(out, p)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
+       seed=st.integers(0, 100))
+def test_identity_roundtrip_when_capacity_sufficient(t, e, k, seed):
+    """With capacity >= T nothing drops: combine(dispatch(x)) == x scaled by
+    the sum of weights (each token contributes w_k * x through expert slots
+    when the 'expert' is the identity)."""
+    idx, w = _random_assignment(t, e, k, seed)
+    p = dsp.plan(idx, w, e, capacity=t * k)
+    assert float(p.fraction_dropped) == 0.0
+    x = jax.random.normal(jax.random.PRNGKey(seed), (t, 8))
+    buf = dsp.dispatch(x, p)
+    y = dsp.combine(buf, p)
+    wsum = np.asarray(jnp.sum(w, axis=1, keepdims=True))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * wsum,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_capacity_drop_order():
+    """Batch-order truncation: earliest tokens keep their slots."""
+    t, e, k = 8, 1, 1
+    idx = jnp.zeros((t, k), jnp.int32)
+    w = jnp.ones((t, k)) * 0.5
+    p = dsp.plan(idx, w, e, capacity=4)
+    pos = np.asarray(p.position)[:, 0]
+    assert (pos[:4] < 4).all() and (pos[4:] >= 4).all()
+    assert abs(float(p.fraction_dropped) - 0.5) < 1e-6
+
+
+def test_priority_dispatch_keeps_heaviest():
+    t, e, k = 8, 1, 1
+    idx = jnp.zeros((t, k), jnp.int32)
+    w = jnp.arange(1, t + 1, dtype=jnp.float32)[:, None] / t
+    p = dsp.plan(idx, w, e, capacity=4, priority=True)
+    kept = np.asarray(p.position)[:, 0] < 4
+    assert kept[-4:].all() and not kept[:4].any()
+
+
+def test_zero_weight_assignments_never_displace():
+    """Batchwise-gating padding (w=0) must not consume capacity."""
+    idx = jnp.array([[0], [0], [0], [0]], jnp.int32)
+    w = jnp.array([[0.0], [1.0], [0.0], [1.0]])
+    p = dsp.plan(idx, w, 1, capacity=2)
+    pos = np.asarray(p.position)[:, 0]
+    assert pos[1] < 2 and pos[3] < 2          # real tokens kept
+    assert (np.asarray(p.weight)[[0, 2], 0] == 0).all()
+    assert float(p.fraction_dropped) == 0.0

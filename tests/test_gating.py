@@ -1,0 +1,112 @@
+"""Gating-network unit + property tests (Eqs. 2-5, 8-10, 16-20)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common import param as pm
+from repro.core import gating, losses
+
+
+def _params(d, e, key=0, scale=1.0):
+    p = pm.materialize(gating.gating_defs(d, e), jax.random.PRNGKey(key))
+    p["wg"] = scale * jax.random.normal(jax.random.PRNGKey(key + 1), (d, e))
+    return p
+
+
+def test_softmax_gating_rows_sum_to_one():
+    p = _params(8, 16)
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 8))
+    g = gating.softmax_gating(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.sum(g, -1)), 1.0, rtol=1e-5)
+
+
+def test_zero_init_is_balanced():
+    """Appendix A: zero-init Wg/Wnoise => 'no signal and some noise'."""
+    p = pm.materialize(gating.gating_defs(8, 16), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096, 8))
+    info = gating.noisy_topk_gating(p, x, 2, train=True,
+                                    rng=jax.random.PRNGKey(2))
+    # With pure noise, expert selection is uniform: importance CV is small.
+    imp = losses.importance(info.gates)
+    assert float(losses.cv_squared(imp)) < 0.05
+    assert float(losses.cv_squared(info.load)) < 0.05
+
+
+@settings(deadline=None, max_examples=20)
+@given(t=st.integers(4, 64), e=st.integers(2, 32), k=st.integers(1, 4),
+       seed=st.integers(0, 1000))
+def test_noisy_topk_invariants(t, e, k, seed):
+    k = min(k, e)
+    p = _params(8, e, key=seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 7), (t, 8))
+    info = gating.noisy_topk_gating(p, x, k, train=False)
+    g = np.asarray(info.gates)
+    # exactly k nonzeros per row, summing to 1
+    assert (np.count_nonzero(g, axis=1) == k).all()
+    np.testing.assert_allclose(g.sum(1), 1.0, rtol=1e-5)
+    # combine weights match gates at the top-k indices
+    w = np.asarray(info.combine_weights)
+    idx = np.asarray(info.expert_index)
+    for i in range(t):
+        np.testing.assert_allclose(g[i, idx[i]], w[i], rtol=1e-5)
+    # weights sorted descending (top-k order)
+    assert (np.diff(w, axis=1) <= 1e-6).all()
+
+
+def test_load_estimator_matches_empirical_load():
+    """Appendix A Eq. 10: Load(X) should track the expected number of
+    tokens routed to each expert under resampled noise."""
+    d, e, t, k = 8, 8, 2048, 2
+    p = _params(d, e, key=3, scale=0.3)
+    # give the noise some width
+    p["wnoise"] = jnp.full((d, e), 0.1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (t, d))
+    info = gating.noisy_topk_gating(p, x, k, train=True,
+                                    rng=jax.random.PRNGKey(5))
+    # empirical: re-draw noise many times and count hard assignments
+    counts = np.zeros(e)
+    for s in range(30):
+        i2 = gating.noisy_topk_gating(p, x, k, train=True,
+                                      rng=jax.random.PRNGKey(100 + s))
+        counts += np.asarray((i2.gates > 0).sum(0))
+    counts /= 30
+    load = np.asarray(info.load)
+    # same ordering and within ~15% on loaded experts
+    rho = np.corrcoef(load, counts)[0, 1]
+    assert rho > 0.95, (load, counts, rho)
+
+
+def test_batchwise_gating_exactly_balanced():
+    """Appendix F: every expert receives exactly m = k*T/E tokens."""
+    p = _params(8, 8, key=6)
+    x = jax.random.normal(jax.random.PRNGKey(7), (128, 8))
+    info = gating.batchwise_gating(p, x, k=2)
+    load = np.asarray(info.load)
+    assert (load == load[0]).all() and load[0] == 2 * 128 // 8
+
+
+def test_threshold_gating_approaches_batchwise():
+    """Eq. 20 minimization: learned thresholds reproduce the batchwise mask."""
+    d, e, k, t = 8, 8, 2, 256
+    p = _params(d, e, key=8)
+    thr = pm.materialize(gating.threshold_defs(e), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(9), (t, d))
+
+    def loss(tv):
+        return gating.batchwise_threshold_loss(p, {"t": tv["t"]}, x, k)
+
+    lr = 0.05
+    for _ in range(200):
+        g = jax.grad(lambda tv: loss(tv))(thr)
+        thr = {"t": thr["t"] - lr * g["t"]}
+    bw = gating.batchwise_gating(p, x, k)
+    th = gating.threshold_gating(p, thr, x, k)
+    agree = np.mean(np.asarray((bw.gates > 0) == (th.gates > 0)))
+    assert agree > 0.9, agree
+
+
+def test_cv_squared_degenerate():
+    assert float(losses.cv_squared(jnp.ones((1,)))) == 0.0
+    assert float(losses.cv_squared(jnp.ones((8,)))) < 1e-9

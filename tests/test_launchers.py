@@ -1,0 +1,34 @@
+"""Launcher entrypoints run end to end on a dev host (reduced configs)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(mod, *args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-m", mod, *args], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_train_launcher(tmp_path):
+    out = _run("repro.launch.train", "--arch", "qwen3-1.7b", "--reduce",
+               "--steps", "12", "--batch", "4", "--seq", "32",
+               "--checkpoint-every", "6",
+               "--workdir", str(tmp_path / "w"))
+    assert "[train] done" in out
+    # relaunch resumes from the checkpoint
+    out2 = _run("repro.launch.train", "--arch", "qwen3-1.7b", "--reduce",
+                "--steps", "12", "--batch", "4", "--seq", "32",
+                "--checkpoint-every", "6",
+                "--workdir", str(tmp_path / "w"))
+    assert "restored checkpoint" in out2
+
+
+def test_serve_launcher():
+    out = _run("repro.launch.serve", "--arch", "smollm-135m", "--reduce",
+               "--requests", "2", "--prompt-len", "8", "--new-tokens", "4")
+    assert "tok/s" in out

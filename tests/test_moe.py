@@ -1,0 +1,133 @@
+"""MoE layer behaviour: §4 balancing (Table 6 qualitative), hierarchy
+(Appendix B), and the layer's functional invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import param as pm
+from repro.core import moe as moe_lib
+from repro.core.hierarchical import HMoEArgs, hmoe_apply, hmoe_defs
+from repro.core.moe import MoEArgs, moe_apply, moe_defs
+
+
+def _setup(**kw):
+    a = MoEArgs(n_experts=kw.pop("n_experts", 8), k=kw.pop("k", 2),
+                d_model=16, d_ff=32, dtype=jnp.float32, **kw)
+    params = pm.materialize(moe_defs(a), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
+    return a, params, x
+
+
+def test_output_shape_and_finite():
+    a, params, x = _setup()
+    y, aux = moe_apply(params, x, a, train=True, rng=jax.random.PRNGKey(2))
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(float(aux["aux_loss"]))
+
+
+def test_balancing_losses_reduce_imbalance():
+    """Table 6: training WITH the losses yields CV(Importance) and CV(Load)
+    near zero and max/mean load near 1; without them the gate collapses."""
+    def train(w_importance, w_load, steps=150):
+        a, params, _ = _setup(w_importance=w_importance, w_load=w_load,
+                              capacity_factor=4.0)
+        # break symmetry: biased init favours expert 0
+        params["gate"]["wg"] = params["gate"]["wg"].at[:, 0].set(1.0)
+        data = jax.random.normal(jax.random.PRNGKey(3), (512, 16))
+
+        def loss_fn(p, x, rng):
+            y, aux = moe_apply(p, x, a, train=True, rng=rng)
+            # toy regression task
+            return jnp.mean((y - x) ** 2) + aux["aux_loss"], aux
+
+        @jax.jit
+        def step(p, rng):
+            (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, data, rng)
+            p = jax.tree_util.tree_map(lambda a_, b: a_ - 0.1 * b, p, g)
+            return p, aux
+        aux = None
+        for s in range(steps):
+            params, aux = step(params, jax.random.PRNGKey(10 + s))
+        return {k: float(v) for k, v in aux["metrics"].items()}
+
+    balanced = train(0.1, 0.1)
+    unbalanced = train(0.0, 0.0)
+    assert balanced["cv_importance"] < 1.0
+    assert balanced["max_over_mean_load"] < 2.5
+    # no-loss run stays collapsed on the favoured expert
+    assert unbalanced["max_over_mean_load"] > balanced["max_over_mean_load"]
+
+
+def test_eval_deterministic():
+    a, params, x = _setup()
+    params["gate"]["wg"] = jax.random.normal(jax.random.PRNGKey(9), (16, 8))
+    y1, _ = moe_apply(params, x, a, train=False)
+    y2, _ = moe_apply(params, x, a, train=False)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_expert_permutation_equivariance():
+    """Permuting experts (weights + gate columns) leaves the output
+    unchanged — the layer has no positional dependence on expert ids."""
+    a, params, x = _setup(capacity_factor=8.0, eval_capacity_factor=8.0)
+    params["gate"]["wg"] = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+    y1, _ = moe_apply(params, x, a, train=False)
+    perm = np.random.RandomState(0).permutation(8)
+    p2 = {
+        "gate": {"wg": params["gate"]["wg"][:, perm],
+                 "wnoise": params["gate"]["wnoise"][:, perm]},
+        "w1": params["w1"][perm], "w2": params["w2"][perm],
+    }
+    y2, _ = moe_apply(p2, x, a, train=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_pallas_expert_impl_matches_einsum():
+    a, params, x = _setup(capacity_factor=8.0, eval_capacity_factor=8.0)
+    params["gate"]["wg"] = jax.random.normal(jax.random.PRNGKey(5), (16, 8))
+    y1, _ = moe_apply(params, x, a, train=False)
+    a2 = moe_lib.MoEArgs(**{**a.__dict__, "expert_impl": "pallas"})
+    y2, _ = moe_apply(params, x, a2, train=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_hierarchical_moe_runs_and_balances():
+    a = HMoEArgs(n_groups=4, n_experts_per_group=4, k_primary=2,
+                 k_secondary=2, d_model=16, d_ff=32, dtype=jnp.float32,
+                 capacity_factor=4.0)
+    params = pm.materialize(hmoe_defs(a), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 16))
+    y, aux = hmoe_apply(params, x, a, train=True, rng=jax.random.PRNGKey(2))
+    assert y.shape == x.shape and np.isfinite(np.asarray(y)).all()
+    # zero-init gates: hierarchy starts balanced too
+    assert float(aux["metrics"]["cv_importance"]) < 0.6
+
+
+def test_hierarchical_equivalent_flat_capacity():
+    """A (1 group x E experts) hierarchy behaves like the flat MoE with the
+    same experts when the primary gate routes everything to that group."""
+    e = 4
+    flat = MoEArgs(n_experts=e, k=2, d_model=16, d_ff=32,
+                   dtype=jnp.float32, capacity_factor=8.0,
+                   eval_capacity_factor=8.0)
+    fp = pm.materialize(moe_defs(flat), jax.random.PRNGKey(0))
+    fp["gate"]["wg"] = jax.random.normal(jax.random.PRNGKey(4), (16, e))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    y_flat, _ = moe_apply(fp, x, flat, train=False)
+
+    h = HMoEArgs(n_groups=1, n_experts_per_group=e, k_primary=1,
+                 k_secondary=2, d_model=16, d_ff=32, dtype=jnp.float32,
+                 capacity_factor=64.0)
+    hp = pm.materialize(hmoe_defs(h), jax.random.PRNGKey(0))
+    hp["w1"] = fp["w1"][None]
+    hp["w2"] = fp["w2"][None]
+    hp["gate_secondary"]["wg"] = fp["gate"]["wg"][None]
+    hp["gate_secondary"]["wnoise"] = fp["gate"]["wnoise"][None]
+    y_h, _ = hmoe_apply(hp, x, h, train=False)
+    np.testing.assert_allclose(np.asarray(y_h), np.asarray(y_flat),
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,221 @@
+"""Training substrate: optimizers, checkpoint/restart fault tolerance,
+exact-resume data pipeline, gradient compression, straggler detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import param as pm
+from repro.data.pipeline import DataConfig, DataIterator, batch_at
+from repro.models.paper_lm import PaperLMConfig, paper_lm_defs, paper_lm_loss
+from repro.optim import optimizers as opt_lib
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (dequantize_int8, init_ef_state,
+                                     quantize_int8)
+from repro.train.trainer import Trainer, TrainLoopConfig, make_train_step
+
+
+# --------------------------------------------------------------------------
+# optimizers
+# --------------------------------------------------------------------------
+
+def _quadratic(dim=6):
+    a = jnp.diag(jnp.linspace(1.0, 4.0, dim))
+    params = {"w": jnp.ones((dim, dim)), "b": jnp.ones((dim,))}
+
+    def loss(p):
+        return (jnp.sum((p["w"] @ a) ** 2) + jnp.sum(p["b"] ** 2))
+    return params, loss
+
+
+@pytest.mark.parametrize("kind", ["adam", "factored"])
+def test_optimizer_converges(kind):
+    params, loss = _quadratic()
+    oc = opt_lib.OptConfig(kind=kind, learning_rate=0.3, warmup_steps=10,
+                           clip_norm=0.0)
+    state = opt_lib.init(params, oc)
+    l0 = float(loss(params))
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state, _ = opt_lib.apply_updates(params, grads, state, oc)
+    assert float(loss(params)) < 0.01 * l0
+
+
+def test_factored_state_is_small():
+    """Appendix D: factored second moments keep optimizer memory ~row+col
+    vectors instead of a full matrix."""
+    params = {"w": jnp.ones((512, 512))}
+    oc_f = opt_lib.OptConfig(kind="factored")
+    oc_a = opt_lib.OptConfig(kind="adam")
+    sf = opt_lib.state_bytes(opt_lib.init(params, oc_f)["mu"])
+    sa = opt_lib.state_bytes(opt_lib.init(params, oc_a)["mu"])
+    assert sf < sa / 100
+
+
+def test_state_defs_match_init():
+    cfg = PaperLMConfig(vocab_size=64, variant="moe", d_model=16,
+                        n_experts=4, k=2, expert_hidden=32)
+    defs = paper_lm_defs(cfg)
+    params = pm.materialize(defs, jax.random.PRNGKey(0))
+    oc = opt_lib.OptConfig(kind="factored")
+    real = opt_lib.init(params, oc)
+    abst = pm.abstract(opt_lib.state_defs(defs, oc))
+    ra = jax.tree_util.tree_leaves(real)
+    aa = jax.tree_util.tree_leaves(abst)
+    assert len(ra) == len(aa)
+    for r, a in zip(ra, aa):
+        assert r.shape == a.shape, (r.shape, a.shape)
+
+
+def test_schedule_warmup_then_inverse_sqrt():
+    oc = opt_lib.OptConfig(learning_rate=1.0, warmup_steps=100)
+    assert float(opt_lib.schedule(oc, jnp.int32(50))) == pytest.approx(0.5)
+    assert float(opt_lib.schedule(oc, jnp.int32(100))) == pytest.approx(1.0)
+    assert float(opt_lib.schedule(oc, jnp.int32(400))) == pytest.approx(0.5)
+
+
+# --------------------------------------------------------------------------
+# data pipeline: exact resume
+# --------------------------------------------------------------------------
+
+def test_data_deterministic_and_seekable():
+    dc = DataConfig(vocab_size=97, seq_len=16, batch_size=4, n_clusters=3)
+    it = DataIterator(dc)
+    seq = [next(it) for _ in range(5)]
+    it2 = DataIterator(dc)
+    it2.restore({"step": 3})
+    np.testing.assert_array_equal(np.asarray(next(it2)["tokens"]),
+                                  np.asarray(seq[3]["tokens"]))
+    np.testing.assert_array_equal(np.asarray(batch_at(dc, 4)["labels"]),
+                                  np.asarray(seq[4]["labels"]))
+
+
+# --------------------------------------------------------------------------
+# checkpointing + crash/restart
+# --------------------------------------------------------------------------
+
+def _mk_trainer(workdir, total_steps=40, crash_at=None, seed=0):
+    dc = DataConfig(vocab_size=64, seq_len=16, batch_size=8, n_clusters=4)
+    cfg = PaperLMConfig(vocab_size=64, variant="moe", n_experts=4, k=2,
+                        d_model=16, expert_hidden=32, dropout=0.0)
+    params = pm.materialize(paper_lm_defs(cfg), jax.random.PRNGKey(seed))
+    return Trainer(
+        loss_fn=lambda p, b, r: paper_lm_loss(p, b, cfg, rng=r),
+        params=params,
+        oc=opt_lib.OptConfig(learning_rate=1e-2, warmup_steps=10),
+        loop=TrainLoopConfig(total_steps=total_steps, checkpoint_every=10,
+                             log_every=100),
+        data_iter=DataIterator(dc), workdir=workdir,
+        crash_at_step=crash_at)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    mgr.save(7, tree, {"data": {"step": 7}})
+    got, extra, step = mgr.restore(7, tree)
+    assert step == 7 and extra["data"]["step"] == 7
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+    assert got["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_prunes_and_atomic(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+    # a stray .tmp dir must not be listed as a checkpoint
+    os.makedirs(tmp_path / "step_0000000099.tmp")
+    assert 99 not in mgr.all_steps()
+
+
+def test_crash_and_resume_bitexact(tmp_path):
+    """Kill training mid-run; a fresh Trainer must resume from the last
+    checkpoint and reach the same final state as an uninterrupted run."""
+    w1 = tmp_path / "crash"
+    t = _mk_trainer(str(w1), total_steps=40, crash_at=25)
+    with pytest.raises(RuntimeError, match="injected crash"):
+        t.run()
+    t2 = _mk_trainer(str(w1), total_steps=40)     # auto-restores step 20
+    assert t2.start_step == 20
+    assert t2.data_iter.step == 20                # data stream seeks too
+    m_resumed = t2.run()
+
+    w2 = tmp_path / "clean"
+    m_clean = _mk_trainer(str(w2), total_steps=40).run()
+    assert m_resumed["loss"] == pytest.approx(m_clean["loss"], rel=1e-5)
+
+
+def test_straggler_detection(tmp_path):
+    t = _mk_trainer(str(tmp_path / "s"), total_steps=12)
+    import time as _time
+    orig = t.step_fn
+
+    def slow(state, batch, rng, _n=[0]):
+        _n[0] += 1
+        if _n[0] == 11:
+            _time.sleep(0.5)
+        return orig(state, batch, rng)
+    t.step_fn = slow
+    t.run()
+    assert any(ev["step"] == 10 for ev in t.straggler_events), \
+        t.straggler_events
+
+
+# --------------------------------------------------------------------------
+# microbatched step == full-batch step
+# --------------------------------------------------------------------------
+
+def test_grad_accumulation_equivalence():
+    cfg = PaperLMConfig(vocab_size=64, variant="moe_1_wide", d_model=16,
+                        dropout=0.0)
+    params = pm.materialize(paper_lm_defs(cfg), jax.random.PRNGKey(0))
+    dc = DataConfig(vocab_size=64, seq_len=16, batch_size=8, n_clusters=4)
+    batch = batch_at(dc, 0)
+    oc = opt_lib.OptConfig(learning_rate=1e-2, warmup_steps=1)
+    loss_fn = lambda p, b, r: paper_lm_loss(p, b, cfg, rng=r, train=False)
+    s1 = make_train_step(loss_fn, oc, microbatches=1)
+    s4 = make_train_step(loss_fn, oc, microbatches=4)
+    st = {"params": params, "opt": opt_lib.init(params, oc)}
+    rng = jax.random.PRNGKey(1)
+    out1, m1 = s1(st, batch, rng)
+    out4, m4 = s4({"params": params, "opt": opt_lib.init(params, oc)},
+                  batch, rng)
+    for a, b in zip(jax.tree_util.tree_leaves(out1["params"]),
+                    jax.tree_util.tree_leaves(out4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-6)
+
+
+# --------------------------------------------------------------------------
+# int8 error-feedback compression
+# --------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """The accumulated compressed sum converges to the true sum: EF replays
+    quantization error so the bias does not accumulate."""
+    rng = np.random.RandomState(0)
+    true_acc = np.zeros(64)
+    comp_acc = np.zeros(64)
+    ef = np.zeros(64)
+    for step in range(200):
+        g = rng.randn(64)
+        true_acc += g
+        e = g + ef
+        q, s = quantize_int8(jnp.asarray(e))
+        deq = np.asarray(dequantize_int8(q, s))
+        ef = e - deq
+        comp_acc += deq
+    # residual error is bounded by one step's quantization error
+    assert np.abs(true_acc - comp_acc).max() < 0.2
