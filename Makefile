@@ -1,0 +1,23 @@
+# One-word entry points for the tier-1 loop, the slow suite, and the
+# micro-benchmarks.  PYTHONPATH=src is baked in so `make test-tier1` is
+# the whole tier-1 command.
+PY ?= python
+export PYTHONPATH := src:.
+
+.PHONY: test-tier1 test-slow test-all bench-micro
+
+# Tier-1: everything except slow/tpu (the conftest default selection).
+test-tier1:
+	$(PY) -m pytest -q
+
+# The slow tier (multi-device subprocess equivalence, training curves).
+test-slow:
+	$(PY) -m pytest -q -m slow
+
+# Both tiers in one run (tpu tests still excluded: TPU CI only).
+test-all:
+	$(PY) -m pytest -q -m "not tpu"
+
+# Host-side microbenchmarks -> BENCH_micro.json (perf trajectory).
+bench-micro:
+	$(PY) benchmarks/run.py --only micro --json BENCH_micro.json

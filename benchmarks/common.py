@@ -19,5 +19,10 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+ROWS: list[dict] = []           # every emit() lands here for JSON export
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
+Prints ``name,us_per_call,derived`` CSV rows and writes the collected
+rows as JSON (default ``BENCH_micro.json``) so the perf trajectory
+accumulates across PRs.  Mapping to the paper:
 
   table7_ops        -> Table 7 (and Table 1): ops/timestep + params vs the
                        paper's published accounting (hard-asserted <12% err)
@@ -11,23 +13,68 @@ Prints ``name,us_per_call,derived`` CSV rows.  Mapping to the paper:
   (Figure 3 is Figure 2 at 100B words; Table 5 needs the 12-pair corpus —
    both noted in EXPERIMENTS.md §Skips.  TPU-side numbers live in
    EXPERIMENTS.md §Roofline, produced by repro.launch.dryrun.)
+
+Usage:
+  PYTHONPATH=src python benchmarks/run.py                 # everything
+  PYTHONPATH=src python benchmarks/run.py --only micro    # just microbench
+  PYTHONPATH=src python benchmarks/run.py --json out.json
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
+
+SUITES = ("table7", "table2", "micro", "table6", "fig2")
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SUITES,
+                    help="run a single suite (default: all)")
+    ap.add_argument("--json", default=None,
+                    help="path for the JSON row dump ('' to disable; "
+                         "default BENCH_micro.json for --only micro, "
+                         "BENCH_full.json otherwise — so the committed "
+                         "micro trajectory is never clobbered by a full "
+                         "run)")
+    args = ap.parse_args()
+    if args.json is None:
+        args.json = ("BENCH_micro.json" if args.only == "micro"
+                     else "BENCH_full.json")
+
     print("name,us_per_call,derived")
-    from benchmarks import (fig2_capacity, microbench, table2_mt_ops,
-                            table6_balance, table7_ops)
+    from benchmarks import (common, fig2_capacity, microbench,
+                            table2_mt_ops, table6_balance, table7_ops)
+    runners = {
+        "table7": table7_ops.run,
+        "table2": table2_mt_ops.run,
+        "micro": microbench.run,
+        "table6": table6_balance.run,
+        "fig2": fig2_capacity.run,
+    }
+    picked = [args.only] if args.only else list(SUITES)
     t0 = time.time()
-    table7_ops.run()
-    table2_mt_ops.run()
-    microbench.run()
-    table6_balance.run()
-    fig2_capacity.run()
-    print(f"benchmarks_total,{(time.time()-t0)*1e6:.0f},wall")
+    for name in picked:
+        runners[name]()
+    wall_us = (time.time() - t0) * 1e6
+    print(f"benchmarks_total,{wall_us:.0f},wall")
+
+    if args.json:
+        import jax
+        payload = {
+            "suites": picked,
+            "wall_us": round(wall_us),
+            "host": platform.node(),
+            "platform": platform.platform(),
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {len(common.ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -29,17 +29,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 from repro.core import dispatch as dsp
 from repro.core import gating, losses
 from repro.core.moe import MoEArgs
+from repro.sharding import context as ctx_lib
 
 
 def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
-               ep_axis: str, fsdp_axis: str | None):
-    """Body executed per shard under shard_map."""
-    ep = jax.lax.axis_size(ep_axis)
+               ep_axis: str, fsdp_axis: str | None, ep: int):
+    """Body executed per shard under shard_map.
+
+    ``ep`` is the ep-axis size, passed from the mesh at the shard_map
+    boundary (0.4.x jax cannot query a mapped axis's size by name)."""
     ep_rank = jax.lax.axis_index(ep_axis)
     t_local, d = x_local.shape
     assert a.n_experts % ep == 0, (a.n_experts, ep)
@@ -108,14 +110,27 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
     return y, {"aux_loss": aux_loss, "metrics": metrics}
 
 
-def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh, *, train: bool = True,
-                 rng: jax.Array | None = None, ep_axis: str = "model",
-                 dp_axes: tuple[str, ...] = ("data",)):
+def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
+                 train: bool = True, rng: jax.Array | None = None,
+                 ep_axis: str = "model",
+                 dp_axes: tuple[str, ...] = ("data",),
+                 ctx: ctx_lib.MeshContext | None = None):
     """Expert-parallel MoE over a flat token batch x: [T, d_model].
 
     Tokens shard over (dp_axes..., ep_axis); expert weights shard as
     [experts -> ep_axis, d_model -> dp_axes[-1] (FSDP)]; gates replicated.
+    The mesh comes from ``ctx`` when given (explicit-first), else the
+    positional ``mesh`` argument.  NOTE: only ``ctx.mesh`` is consumed —
+    this schedule's sharding is fixed by ``ep_axis``/``dp_axes``, not by
+    ``ctx.rules``, and it must own the whole mesh (no enclosing Manual
+    axes).
     """
+    if ctx is not None and ctx.mesh is not None:
+        assert not ctx.manual_axes, \
+            "moe_apply_ep opens its own shard_map; it cannot run inside " \
+            "a Manual-mode context"
+        mesh = ctx.mesh
+    assert mesh is not None, "moe_apply_ep needs a mesh (ctx or positional)"
     fsdp_axis = dp_axes[-1] if dp_axes else None
     token_spec = P(tuple(dp_axes) + (ep_axis,), None)
     w_specs = {
@@ -130,7 +145,7 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh, *, train: bool = True,
         "cv_importance": P(), "cv_load": P(), "max_over_mean_load": P(),
         "fraction_dropped": P()}}
     fn = functools.partial(_local_moe, a=a, train=train, rng=rng,
-                           ep_axis=ep_axis, fsdp_axis=fsdp_axis)
-    return shard_map(fn, mesh=mesh, in_specs=(w_specs, token_spec),
-                     out_specs=(token_spec, aux_spec),
-                     check_rep=False)(params, x)
+                           ep_axis=ep_axis, fsdp_axis=fsdp_axis,
+                           ep=mesh.shape[ep_axis])
+    return ctx_lib.shard_map(fn, mesh, (w_specs, token_spec),
+                             (token_spec, aux_spec))(params, x)

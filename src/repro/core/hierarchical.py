@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.common.param import ParamDef
 from repro.core import dispatch as dsp
 from repro.core import gating, losses
-from repro.sharding import partition
+from repro.sharding import context as ctx_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +116,9 @@ def _secondary_one_group(gate_params, w1, w2, w3, x_grp, valid, a: HMoEArgs,
 
 
 def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
-               rng: jax.Array | None = None) -> tuple[jax.Array, dict]:
+               rng: jax.Array | None = None,
+               ctx: ctx_lib.MeshContext | None = None
+               ) -> tuple[jax.Array, dict]:
     """x: [T, d_model] -> (y [T, d_model], aux)."""
     t, d = x.shape
     rng_p, rng_s = (jax.random.split(rng) if rng is not None
@@ -129,8 +131,8 @@ def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
     buf = dsp.dispatch(x, plan_p)                      # [a, Cp, d]
     valid = dsp.dispatch(jnp.ones((t, 1), x.dtype), plan_p)[..., 0]
     valid = (valid > 0).astype(jnp.float32)            # [a, Cp]
-    buf = partition.with_constraint(buf, partition.PLANS["dp_tp_ep"],
-                                    ("expert_groups", None, "embed"))
+    buf = ctx_lib.with_constraint(buf, ("expert_groups", None, "embed"),
+                                  ctx)
 
     w3 = params.get("w3", jnp.zeros_like(params["w1"]))
     rngs = (jax.random.split(rng_s, a.n_groups) if rng_s is not None

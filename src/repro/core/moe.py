@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.common.param import ParamDef
 from repro.core import dispatch as dsp
 from repro.core import gating, losses
-from repro.sharding import partition
+from repro.sharding import context as ctx_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,9 +105,14 @@ def run_gating(params, x: jax.Array, a: MoEArgs, *, train: bool,
 
 
 def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
-              rng: jax.Array | None = None) -> tuple[jax.Array, dict]:
+              rng: jax.Array | None = None,
+              ctx: ctx_lib.MeshContext | None = None
+              ) -> tuple[jax.Array, dict]:
     """x: [T, d_model] (tokens already flattened — the paper's 'convolutional'
-    application over all positions of a batch, §3.1)."""
+    application over all positions of a batch, §3.1).
+
+    ``ctx`` is the explicit sharding context; ``None`` resolves the
+    contextvar (identity constraints off-mesh)."""
     t, d = x.shape
     info = run_gating(params, x, a, train=train, rng=rng)
 
@@ -122,21 +127,21 @@ def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
                  capacity, priority=a.priority_dispatch)
 
     token_axis = "tokens" if a.wide_dispatch else "batch"
-    x = partition.with_constraint(x, _rules(), (token_axis, "embed"))
+    x = ctx_lib.with_constraint(x, (token_axis, "embed"), ctx)
     if a.dispatch_impl == "einsum":
         buf = dsp.dispatch_einsum(x, p)
     else:
         buf = dsp.dispatch(x, p)
-    buf = partition.with_constraint(
-        buf, _rules(), ("experts", "expert_capacity", "embed"))
+    buf = ctx_lib.with_constraint(
+        buf, ("experts", "expert_capacity", "embed"), ctx)
     out = expert_ffn(params, buf, a)
-    out = partition.with_constraint(
-        out, _rules(), ("experts", "expert_capacity", "embed"))
+    out = ctx_lib.with_constraint(
+        out, ("experts", "expert_capacity", "embed"), ctx)
     if a.dispatch_impl == "einsum":
         y = dsp.combine_einsum(out, p, dtype=x.dtype)
     else:
         y = dsp.combine(out, p, dtype=x.dtype)
-    y = partition.with_constraint(y, _rules(), (token_axis, "embed"))
+    y = ctx_lib.with_constraint(y, (token_axis, "embed"), ctx)
     if a.sigmoid_output:
         y = jax.nn.sigmoid(y.astype(jnp.float32)).astype(x.dtype)
 
@@ -148,28 +153,3 @@ def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
     metrics = losses.balance_metrics(info.gates, info.load)
     metrics["fraction_dropped"] = p.fraction_dropped
     return y, {"aux_loss": aux_loss, "metrics": metrics}
-
-
-_RULES_OVERRIDE: list = []
-
-
-def _rules() -> partition.ShardingRules:
-    """Active sharding rules (train step pushes its plan here)."""
-    if _RULES_OVERRIDE:
-        return _RULES_OVERRIDE[-1]
-    return partition.PLANS["dp_tp_ep"]
-
-
-class rules_scope:
-    """Context manager: route MoE-internal constraints to a specific plan."""
-
-    def __init__(self, rules: partition.ShardingRules):
-        self.rules = rules
-
-    def __enter__(self):
-        _RULES_OVERRIDE.append(self.rules)
-        return self
-
-    def __exit__(self, *exc):
-        _RULES_OVERRIDE.pop()
-        return False

@@ -58,8 +58,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
+    from repro.sharding import context as ctx_lib
     ma = compiled.memory_analysis()
-    cost = dict(compiled.cost_analysis())
+    cost = ctx_lib.compiled_cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = rl.parse_collectives(hlo, n_dev)
     params = count_params(cfg)

@@ -113,6 +113,7 @@ def main():
     defs = pp.pipeline_param_defs(cfg, n_stages)
     params_abs = pm.abstract(defs)
     opt_abs = pm.abstract(opt_lib.state_defs(defs, oc))
+    from repro.sharding import context as ctx_lib
     from repro.sharding import partition
     rules = partition.PLANS["dp_tp_ep"]
     # stage axis sharding for the stacked blocks; model-axis sharding for
@@ -120,26 +121,26 @@ def main():
     stage_rules = partition.ShardingRules(
         table={**rules.table, "stage": ("data",), "layers": (),
                "embed_fsdp": ()}, name="pp")
-    params_shd = partition.tree_shardings(stage_rules, mesh, defs)
-    opt_shd = partition.tree_shardings(
-        stage_rules, mesh, opt_lib.state_defs(defs, oc))
+    ctx = ctx_lib.MeshContext(mesh=mesh, rules=stage_rules)
+    params_shd = ctx.tree_shardings(defs)
+    opt_shd = ctx.tree_shardings(opt_lib.state_defs(defs, oc))
 
     batch_abs = shp.batch_inputs(cfg, shape)
-    batch_shd = {k: partition.shd(stage_rules, mesh, v.shape,
-                                  ("batch", "seq") if v.ndim == 2 else
-                                  ("batch", None, "embed"))
+    batch_shd = {k: ctx.shd(v.shape,
+                            ("batch", "seq") if v.ndim == 2 else
+                            ("batch", None, "embed"))
                  for k, v in batch_abs.items()}
 
     step = pp.make_pipeline_train_step(cfg, oc, mesh=mesh,
                                        n_stages=n_stages,
-                                       n_micro=args.micro)
+                                       n_micro=args.micro, ctx=ctx)
     state_abs = {"params": params_abs, "opt": opt_abs}
     state_shd = {"params": params_shd, "opt": opt_shd}
     seed = jax.ShapeDtypeStruct((), jnp.int32)
     print(f"[pp] lowering {args.arch} x {args.shape}: {n_stages} stages x "
           f"{args.micro} microbatches ...", flush=True)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with ctx_lib.use_mesh(mesh):
         lowered = jax.jit(
             step, in_shardings=(state_shd, batch_shd,
                                 jax.sharding.NamedSharding(
@@ -170,7 +171,7 @@ def main():
                                       - ma.alias_size_in_bytes)},
         "collectives": coll,
         "analytic": ana,
-        "cost": dict(compiled.cost_analysis()),
+        "cost": ctx_lib.compiled_cost_analysis(compiled),
     }
     rec["cost"] = {k: v for k, v in rec["cost"].items()
                    if k in ("flops", "bytes accessed")}

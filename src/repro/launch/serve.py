@@ -14,9 +14,11 @@ import jax
 
 from repro.common import param as pm
 from repro.configs.base import get_config
+from repro.launch.mesh import make_host_mesh
 from repro.launch.train import reduced
 from repro.models import lm
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.sharding import context as ctx_lib
 from repro.train.checkpoint import CheckpointManager
 
 
@@ -44,9 +46,13 @@ def main():
         params = restored["params"]
         print(f"[serve] restored checkpoint step {step}")
 
+    if len(jax.devices()) > 1:
+        ctx = ctx_lib.MeshContext.for_mesh(make_host_mesh(), "decode_std")
+    else:
+        ctx = ctx_lib.MeshContext.null(plan="decode_std")
     engine = ServeEngine(params, cfg, ServeConfig(
         max_len=args.prompt_len + args.new_tokens + 1,
-        temperature=args.temperature))
+        temperature=args.temperature), ctx=ctx)
     prompts = np.random.RandomState(0).randint(
         1, cfg.vocab_size, (args.requests, args.prompt_len))
     t0 = time.perf_counter()

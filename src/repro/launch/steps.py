@@ -7,7 +7,6 @@ Everything here works on ShapeDtypeStructs — a kimi-k2 train cell describes
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,9 +14,9 @@ import jax.numpy as jnp
 from repro.common import param as pm
 from repro.configs import shapes as shp
 from repro.configs.base import ModelConfig
-from repro.core import moe as moe_lib
 from repro.models import lm, transformer
 from repro.optim import optimizers as opt_lib
+from repro.sharding import context as ctx_lib
 from repro.sharding import partition
 
 
@@ -33,11 +32,10 @@ class LoweringSpec:
 
 
 def make_train_step_fn(cfg: ModelConfig, oc: opt_lib.OptConfig,
-                       rules: partition.ShardingRules,
+                       ctx: ctx_lib.MeshContext,
                        microbatches: int = 1):
     def loss_fn(params, batch, rng):
-        with moe_lib.rules_scope(rules):
-            return lm.lm_loss(params, batch, cfg, rng=rng, train=True)
+        return lm.lm_loss(params, batch, cfg, rng=rng, train=True, ctx=ctx)
 
     def grads_of(params, batch, rng):
         return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, rng)
@@ -83,17 +81,15 @@ def make_train_step_fn(cfg: ModelConfig, oc: opt_lib.OptConfig,
     return train_step
 
 
-def make_prefill_step_fn(cfg: ModelConfig, rules: partition.ShardingRules):
+def make_prefill_step_fn(cfg: ModelConfig, ctx: ctx_lib.MeshContext):
     def prefill_step(params, batch, cache):
-        with moe_lib.rules_scope(rules):
-            return lm.lm_prefill(params, batch, cache, cfg)
+        return lm.lm_prefill(params, batch, cache, cfg, ctx=ctx)
     return prefill_step
 
 
-def make_decode_step_fn(cfg: ModelConfig, rules: partition.ShardingRules):
+def make_decode_step_fn(cfg: ModelConfig, ctx: ctx_lib.MeshContext):
     def serve_step(params, tokens, cache, cur_index):
-        with moe_lib.rules_scope(rules):
-            return lm.lm_decode(params, tokens, cache, cur_index, cfg)
+        return lm.lm_decode(params, tokens, cache, cur_index, cfg, ctx=ctx)
     return serve_step
 
 
@@ -102,20 +98,18 @@ def build_lowering(cfg: ModelConfig, shape: shp.ShapeSpec,
                    oc: opt_lib.OptConfig | None = None,
                    plan: str | None = None) -> LoweringSpec:
     plan = plan or partition.plan_for(shape.name)
-    rules = partition.PLANS[plan]
+    ctx = ctx_lib.MeshContext.for_mesh(mesh, plan)
     fallbacks: list = []
     oc = oc or opt_lib.OptConfig(kind="factored")
 
     param_defs = lm.lm_defs(cfg)
     params_abs = pm.abstract(param_defs)
-    params_shd = partition.tree_shardings(rules, mesh, param_defs,
-                                          fallbacks)
+    params_shd = ctx.tree_shardings(param_defs, fallbacks)
 
     batch_abs = shp.batch_inputs(cfg, shape)
     batch_axes = shp.logical_batch_axes(cfg, shape)
     batch_shd = {
-        k: partition.shd(rules, mesh, batch_abs[k].shape, batch_axes[k],
-                         fallbacks)
+        k: ctx.shd(batch_abs[k].shape, batch_axes[k], fallbacks)
         for k in batch_abs}
 
     def repl(x=()):
@@ -127,10 +121,8 @@ def build_lowering(cfg: ModelConfig, shape: shp.ShapeSpec,
         opt_defs = opt_lib.state_defs(param_defs, oc)
         state_abs = {"params": params_abs, "opt": pm.abstract(opt_defs)}
         state_shd = {"params": params_shd,
-                     "opt": partition.tree_shardings(rules, mesh, opt_defs,
-                                                     fallbacks)}
-        bsh = partition.resolve_spec(rules, mesh, (shape.global_batch,),
-                                     ("batch",))
+                     "opt": ctx.tree_shardings(opt_defs, fallbacks)}
+        bsh = ctx.resolve((shape.global_batch,), ("batch",))
         n_bsh = 1
         for e in bsh:
             if e is None:
@@ -138,7 +130,7 @@ def build_lowering(cfg: ModelConfig, shape: shp.ShapeSpec,
             for ax in (e if isinstance(e, tuple) else (e,)):
                 n_bsh *= mesh.shape[ax]
         fn = make_train_step_fn(
-            cfg, oc, rules,
+            cfg, oc, ctx,
             microbatches=cfg_microbatches(cfg, shape, n_bsh))
         seed_abs = jax.ShapeDtypeStruct((), jnp.int32)
         return LoweringSpec(
@@ -148,16 +140,16 @@ def build_lowering(cfg: ModelConfig, shape: shp.ShapeSpec,
             fallbacks=fallbacks)
 
     cache_abs, cache_defs = shp.cache_specs(cfg, shape)
-    cache_shd = partition.tree_shardings(rules, mesh, cache_defs, fallbacks)
+    cache_shd = ctx.tree_shardings(cache_defs, fallbacks)
     if shape.kind == "prefill":
-        fn = make_prefill_step_fn(cfg, rules)
+        fn = make_prefill_step_fn(cfg, ctx)
         return LoweringSpec(
             fn=fn, args=(params_abs, batch_abs, cache_abs),
             in_shardings=(params_shd, batch_shd, cache_shd),
             out_shardings=(None, cache_shd), kind="prefill",
             fallbacks=fallbacks)
 
-    fn = make_decode_step_fn(cfg, rules)
+    fn = make_decode_step_fn(cfg, ctx)
     idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
     return LoweringSpec(
         fn=fn, args=(params_abs, batch_abs["tokens"], cache_abs, idx_abs),
@@ -172,7 +164,7 @@ _DONATE = {"train": (0,), "prefill": (2,), "decode": (2,)}
 def lower_cell(cfg: ModelConfig, shape: shp.ShapeSpec,
                mesh: jax.sharding.Mesh, **kw):
     spec = build_lowering(cfg, shape, mesh, **kw)
-    with jax.set_mesh(mesh):
+    with ctx_lib.use_mesh(mesh):
         jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
                          out_shardings=spec.out_shardings,
                          donate_argnums=_DONATE[spec.kind])

@@ -20,8 +20,10 @@ import jax.numpy as jnp
 from repro.common import param as pm
 from repro.configs.base import get_config
 from repro.data.pipeline import DataConfig, DataIterator
+from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.optim.optimizers import OptConfig
+from repro.sharding import context as ctx_lib
 from repro.train.trainer import Trainer, TrainLoopConfig
 
 
@@ -67,10 +69,17 @@ def main():
     print(f"[train] {cfg.name}: {pm.param_count(params)/1e6:.1f}M params "
           f"on {len(jax.devices())} device(s)")
 
+    # Explicit sharding context: a host mesh when more than one device is
+    # visible, else the null (identity-constraint) context.
+    if len(jax.devices()) > 1:
+        ctx = ctx_lib.MeshContext.for_mesh(make_host_mesh(), "dp_tp_ep")
+    else:
+        ctx = ctx_lib.MeshContext.null()
+
     dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                     batch_size=args.batch, n_clusters=64)
     trainer = Trainer(
-        loss_fn=lambda p, b, r: lm.lm_loss(p, b, cfg, rng=r),
+        loss_fn=lambda p, b, r: lm.lm_loss(p, b, cfg, rng=r, ctx=ctx),
         params=params,
         oc=OptConfig(kind=args.optimizer, learning_rate=args.lr,
                      warmup_steps=max(args.steps // 10, 10)),

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.common.param import ParamDef
 from repro.models import layers
-from repro.sharding import partition
+from repro.sharding import context as ctx_lib
 
 NEG_INF = -1e30
 
@@ -336,7 +336,8 @@ flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 def attention(params, x, positions, *, rope_theta: float, qk_norm: bool,
               window: int = 0, q_block: int = 512,
-              kv_block: int = 512, pad_heads: int = 0) -> jax.Array:
+              kv_block: int = 512, pad_heads: int = 0,
+              ctx: ctx_lib.MeshContext | None = None) -> jax.Array:
     """Causal self-attention for train/prefill. x: [B, S, d].
 
     ``pad_heads``: pad query heads (and KV heads, preserving group
@@ -358,11 +359,9 @@ def attention(params, x, positions, *, rope_theta: float, qk_norm: bool,
         q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, g - g_orig), (0, 0)))
         q = q.reshape(b, sq, kv_heads * g, hd)
         h = kv_heads * g
-    q = partition.with_constraint(q, _rules(), ("batch", None, "heads", None))
-    k = partition.with_constraint(k, _rules(),
-                                  ("batch", None, "kv_heads", None))
-    v = partition.with_constraint(v, _rules(),
-                                  ("batch", None, "kv_heads", None))
+    q = ctx_lib.with_constraint(q, ("batch", None, "heads", None), ctx)
+    k = ctx_lib.with_constraint(k, ("batch", None, "kv_heads", None), ctx)
+    v = ctx_lib.with_constraint(v, ("batch", None, "kv_heads", None), ctx)
     q_block = min(q_block, sq)
     kv_block = min(kv_block, sq)
     qr = jnp.moveaxis(q.reshape(b, sq, kv_heads, g, hd), 1, 3)
@@ -467,8 +466,3 @@ def decode_attention(params, x, cache, cur_index, *, rope_theta: float,
     y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype),
                    preferred_element_type=jnp.float32).astype(x.dtype)
     return y, {"k": k, "v": v}
-
-
-def _rules():
-    from repro.core.moe import _rules as moe_rules
-    return moe_rules()

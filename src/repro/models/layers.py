@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.param import ParamDef
+from repro.sharding import context as ctx_lib
 
 
 # ---------------------------------------------------------------------------
@@ -68,10 +69,12 @@ def mlp_defs(d: int, d_ff: int, activation: str, dtype) -> dict:
     return defs
 
 
-def mlp(params, x: jax.Array, activation: str) -> jax.Array:
+def mlp(params, x: jax.Array, activation: str,
+        ctx: ctx_lib.MeshContext | None = None) -> jax.Array:
     dt = x.dtype
     h = jnp.einsum("...d,df->...f", x, params["w1"].astype(dt),
                    preferred_element_type=jnp.float32)
+    h = ctx_lib.with_constraint(h, (None,) * (h.ndim - 1) + ("mlp",), ctx)
     if activation == "relu":
         h = jax.nn.relu(h)
     elif activation == "gelu":

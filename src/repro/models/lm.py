@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.common import param as pm
 from repro.configs.base import ModelConfig
 from repro.models import layers, transformer
-from repro.sharding import partition
+from repro.sharding import context as ctx_lib
 
 
 def lm_defs(cfg: ModelConfig) -> dict:
@@ -52,21 +52,17 @@ def _embed_with_prefix(params, tokens, cfg: ModelConfig,
     return x
 
 
-def _rules():
-    from repro.core.moe import _rules as r
-    return r()
-
-
-def logits_fn(params, x, cfg: ModelConfig):
+def logits_fn(params, x, cfg: ModelConfig,
+              ctx: ctx_lib.MeshContext | None = None):
     dt = x.dtype
     logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"]["w"].astype(dt),
                         preferred_element_type=jnp.float32)
-    return partition.with_constraint(logits, _rules(),
-                                     ("batch", None, "vocab"))
+    return ctx_lib.with_constraint(logits, ("batch", None, "vocab"), ctx)
 
 
 def chunked_xent(params, x, labels, cfg: ModelConfig,
-                 chunk: int = 512) -> jax.Array:
+                 chunk: int = 512,
+                 ctx: ctx_lib.MeshContext | None = None) -> jax.Array:
     """Mean cross-entropy without materializing [B, S, V]."""
     b, s, d = x.shape
     chunk = min(chunk, s)
@@ -77,11 +73,11 @@ def chunked_xent(params, x, labels, cfg: ModelConfig,
 
     def body(total, xs):
         xi, li = xs
-        logits = logits_fn(params, xi, cfg)                # [B, c, V] f32
+        logits = logits_fn(params, xi, cfg, ctx)           # [B, c, V] f32
         lse = jax.nn.logsumexp(logits, axis=-1)
         onehot = jax.nn.one_hot(li, cfg.vocab_size, dtype=logits.dtype)
-        onehot = partition.with_constraint(onehot, _rules(),
-                                           ("batch", None, "vocab"))
+        onehot = ctx_lib.with_constraint(onehot, ("batch", None, "vocab"),
+                                         ctx)
         gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
         return total + jnp.sum(lse - gold), None
 
@@ -91,21 +87,22 @@ def chunked_xent(params, x, labels, cfg: ModelConfig,
 
 
 def lm_loss(params, batch: dict, cfg: ModelConfig, *, rng=None,
-            train: bool = True):
+            train: bool = True,
+            ctx: ctx_lib.MeshContext | None = None):
     """batch: tokens [B,S] int32, labels [B,S] int32,
     (+ prefix_embeds [B,n_prefix,d] for vlm/audio stubs).
-    Returns (loss, metrics)."""
-    tokens = partition.with_constraint(batch["tokens"], _rules(),
-                                       ("batch", "seq"))
+    Returns (loss, metrics).  ``ctx`` is the explicit sharding context,
+    threaded through the whole layer stack."""
+    tokens = ctx_lib.with_constraint(batch["tokens"], ("batch", "seq"), ctx)
     x = _embed_with_prefix(params, tokens, cfg, batch.get("prefix_embeds"))
-    x = partition.with_constraint(x, _rules(), ("batch", "seq", "embed"))
+    x = ctx_lib.with_constraint(x, ("batch", "seq", "embed"), ctx)
     positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
                                  x.shape[:2])
     x, aux = transformer.stack_apply(params["blocks"], x, cfg,
                                      positions=positions, rng=rng,
-                                     train=train)
+                                     train=train, ctx=ctx)
     x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    xent = chunked_xent(params, x, batch["labels"], cfg)
+    xent = chunked_xent(params, x, batch["labels"], cfg, ctx=ctx)
     loss = xent + aux["aux_loss"]
     n_moe = jnp.maximum(aux["n_moe"], 1.0)
     metrics = {"xent": xent, "aux_loss": aux["aux_loss"],
@@ -114,25 +111,27 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *, rng=None,
     return loss, metrics
 
 
-def lm_prefill(params, batch: dict, cache, cfg: ModelConfig):
+def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
+               ctx: ctx_lib.MeshContext | None = None):
     """Prompt ingestion. batch: tokens [B,S]. Returns (last_logits, cache)."""
     x = _embed_with_prefix(params, batch["tokens"], cfg,
                            batch.get("prefix_embeds"))
     positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
                                  x.shape[:2])
     x, new_cache = transformer.stack_prefill(params["blocks"], x, cfg,
-                                             cache, positions)
+                                             cache, positions, ctx=ctx)
     x = layers.rmsnorm(params["ln_f"], x[:, -1:, :], cfg.norm_eps)
-    logits = logits_fn(params, x, cfg)[:, 0, :]
+    logits = logits_fn(params, x, cfg, ctx)[:, 0, :]
     return logits, new_cache
 
 
-def lm_decode(params, tokens, cache, cur_index, cfg: ModelConfig):
+def lm_decode(params, tokens, cache, cur_index, cfg: ModelConfig,
+              ctx: ctx_lib.MeshContext | None = None):
     """One decode step. tokens: [B] int32; cur_index: scalar int32 position
     of the *new* token.  Returns (logits [B, V], new_cache)."""
     x = layers.embed(params["embed"], tokens[:, None], cfg.compute_dtype)
     x, new_cache = transformer.stack_decode(params["blocks"], x, cfg, cache,
-                                            cur_index)
+                                            cur_index, ctx=ctx)
     x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    logits = logits_fn(params, x, cfg)[:, 0, :]
+    logits = logits_fn(params, x, cfg, ctx)[:, 0, :]
     return logits, new_cache

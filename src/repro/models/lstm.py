@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.param import ParamDef
+from repro.sharding import context as ctx_lib
 
 
 def lstm_defs(d_in: int, d_hidden: int, d_proj: int | None = None,
@@ -45,9 +46,11 @@ def _cell(params, carry, x_t):
     return (h_new.astype(x_t.dtype), c_new), h_new.astype(x_t.dtype)
 
 
-def lstm(params, x: jax.Array, state: tuple | None = None
+def lstm(params, x: jax.Array, state: tuple | None = None,
+         ctx: ctx_lib.MeshContext | None = None
          ) -> tuple[jax.Array, tuple]:
     """x: [B, S, d_in] -> ([B, S, d_out], final_state)."""
+    x = ctx_lib.with_constraint(x, ("batch", "seq", None), ctx)
     b = x.shape[0]
     d_hidden = params["b"].shape[0] // 4
     rec = params["wh"].shape[0]

@@ -26,6 +26,7 @@ from repro.common.param import ParamDef
 from repro.core import hierarchical as hmoe_lib
 from repro.core import moe as moe_lib
 from repro.models import layers, lstm as lstm_lib
+from repro.sharding import context as ctx_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,15 +106,16 @@ def paper_lm_defs(cfg: PaperLMConfig) -> dict:
     return defs
 
 
-def _mid_layer(params, x2d, cfg: PaperLMConfig, *, train, rng):
+def _mid_layer(params, x2d, cfg: PaperLMConfig, *, train, rng,
+               ctx: ctx_lib.MeshContext | None = None):
     """The capacity layer between the LSTMs. x2d: [T, d]."""
     zero_aux = {"aux_loss": jnp.zeros((), jnp.float32), "metrics": {}}
     if cfg.variant == "moe":
         if cfg.hierarchical:
             return hmoe_lib.hmoe_apply(params["moe"], x2d, _hmoe_args(cfg),
-                                       train=train, rng=rng)
+                                       train=train, rng=rng, ctx=ctx)
         return moe_lib.moe_apply(params["moe"], x2d, _moe_args(cfg),
-                                 train=train, rng=rng)
+                                 train=train, rng=rng, ctx=ctx)
     if cfg.variant == "moe_1_wide":
         h = jax.nn.relu(x2d @ params["mid"]["w1"])
         return jax.nn.sigmoid(h @ params["mid"]["w2"]), zero_aux
@@ -128,7 +130,8 @@ def _mid_layer(params, x2d, cfg: PaperLMConfig, *, train, rng):
 
 
 def paper_lm_loss(params, batch, cfg: PaperLMConfig, *, rng=None,
-                  train: bool = True):
+                  train: bool = True,
+                  ctx: ctx_lib.MeshContext | None = None):
     """batch: tokens/labels [B, S]. Returns (loss, metrics)."""
     tokens, labels = batch["tokens"], batch["labels"]
     b, s = tokens.shape
@@ -152,7 +155,7 @@ def paper_lm_loss(params, batch, cfg: PaperLMConfig, *, rng=None,
             # The MoE is applied convolutionally: all B*S positions as one
             # big batch (§3.1 "Taking Advantage of Convolutionality").
             y2d, aux = _mid_layer(params, x.reshape(b * s, -1), cfg,
-                                  train=train, rng=rngs[2])
+                                  train=train, rng=rngs[2], ctx=ctx)
             x = x + layers.dropout(y2d.reshape(b, s, -1), cfg.dropout,
                                    rngs[2], train)
         h, _ = lstm_lib.lstm(params["lstm2"], x)

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.param import ParamDef
-from repro.sharding import partition
+from repro.sharding import context as ctx_lib
 
 
 def _dt_rank(d_model: int) -> int:
@@ -88,7 +88,8 @@ def _conv1d(params, x: jax.Array, state: jax.Array | None = None):
 
 
 def mamba(params, x: jax.Array, *, d_state: int, chunk: int = 128,
-          return_state: bool = False):
+          return_state: bool = False,
+          ctx: ctx_lib.MeshContext | None = None):
     """Training/prefill forward. x: [B, S, d_model] -> [B, S, d_model].
 
     With ``return_state`` also returns {"ssm", "conv"} for decode handoff."""
@@ -100,8 +101,7 @@ def mamba(params, x: jax.Array, *, d_state: int, chunk: int = 128,
     u_raw = u
     u, _ = _conv1d(params, u)
     u = jax.nn.silu(u)
-    u = partition.with_constraint(u, partition.PLANS["dp_tp_ep"],
-                                  ("batch", None, "ssm_inner"))
+    u = ctx_lib.with_constraint(u, ("batch", None, "ssm_inner"), ctx)
     d_in = u.shape[-1]
 
     chunk = min(chunk, s)

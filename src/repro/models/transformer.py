@@ -20,6 +20,7 @@ from repro.configs.base import LayerKind, ModelConfig, layer_kinds, n_periods
 from repro.core import hierarchical as hmoe
 from repro.core import moe as moe_lib
 from repro.models import attention, layers, ssm
+from repro.sharding import context as ctx_lib
 
 
 def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
@@ -84,7 +85,8 @@ def _add_aux(acc, aux):
             "n_moe": acc["n_moe"] + 1.0}
 
 
-def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng):
+def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
+               ctx: ctx_lib.MeshContext | None = None):
     """Post-mixer FFN with residual. x: [B, S, d]."""
     if kind.ffn == "none":
         return x, None
@@ -96,18 +98,19 @@ def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng):
         flat = h.reshape(b * s, d)
         if cfg.moe_hierarchical:
             y, aux = hmoe.hmoe_apply(params["moe"], flat, _hmoe_args(cfg),
-                                     train=train, rng=rng)
+                                     train=train, rng=rng, ctx=ctx)
         else:
             y, aux = moe_lib.moe_apply(params["moe"], flat, _moe_args(cfg),
-                                       train=train, rng=rng)
+                                       train=train, rng=rng, ctx=ctx)
         out = out + y.reshape(b, s, d)
     if kind.ffn in ("dense", "moe+dense"):
-        out = out + layers.mlp(params["mlp"], h, cfg.activation)
+        out = out + layers.mlp(params["mlp"], h, cfg.activation, ctx=ctx)
     return out, aux
 
 
 def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
-                positions, rng, train: bool):
+                positions, rng, train: bool,
+                ctx: ctx_lib.MeshContext | None = None):
     """Train/prefill block. Returns (x, aux)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
@@ -116,16 +119,17 @@ def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
                                 rope_theta=cfg.rope_theta,
                                 qk_norm=cfg.qk_norm, window=window,
                                 q_block=cfg.q_block, kv_block=cfg.kv_block,
-                                pad_heads=cfg.pad_attn_heads)
+                                pad_heads=cfg.pad_attn_heads, ctx=ctx)
     else:
-        y = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state)
+        y = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state, ctx=ctx)
     x = x + y
-    x, aux = _apply_ffn(params, x, kind, cfg, train=train, rng=rng)
+    x, aux = _apply_ffn(params, x, kind, cfg, train=train, rng=rng, ctx=ctx)
     return x, aux
 
 
 def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
-                  positions):
+                  positions,
+                  ctx: ctx_lib.MeshContext | None = None):
     """Prefill block: causal attention + cache fill. Returns (x, cache)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
@@ -136,14 +140,15 @@ def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
             q_block=cfg.q_block, kv_block=cfg.kv_block)
     else:
         y, new_cache = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state,
-                                 return_state=True)
+                                 return_state=True, ctx=ctx)
     x = x + y
-    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None)
+    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx)
     return x, new_cache
 
 
 def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
-                 cur_index):
+                 cur_index,
+                 ctx: ctx_lib.MeshContext | None = None):
     """One-token decode block. Returns (x, new_cache)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
@@ -155,7 +160,7 @@ def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
         y, new_cache = ssm.mamba_decode(params["mamba"], h, cache,
                                         d_state=cfg.ssm_d_state)
     x = x + y
-    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None)
+    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx)
     return x, new_cache
 
 
@@ -186,7 +191,7 @@ def stack_defs(cfg: ModelConfig) -> dict:
 
 
 def stack_apply(params, x, cfg: ModelConfig, *, positions, rng,
-                train: bool):
+                train: bool, ctx: ctx_lib.MeshContext | None = None):
     """Run all layers. Returns (x, summed aux)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
@@ -199,7 +204,8 @@ def stack_apply(params, x, cfg: ModelConfig, *, positions, rng,
             sub = (jax.random.fold_in(rng, idx * cfg.period + p)
                    if rng is not None else None)
             x, a = block_apply(period_params[f"pos{p}"], x, kinds[p], cfg,
-                               positions=positions, rng=sub, train=train)
+                               positions=positions, rng=sub, train=train,
+                               ctx=ctx)
             if a is not None:
                 aux = _add_aux(aux, a)
         return (x, aux), None
@@ -214,7 +220,8 @@ def stack_apply(params, x, cfg: ModelConfig, *, positions, rng,
                if rng is not None else None)
         x, a = block_apply(params["tail"][f"pos{p}"], x,
                            kinds[p % cfg.period], cfg,
-                           positions=positions, rng=sub, train=train)
+                           positions=positions, rng=sub, train=train,
+                           ctx=ctx)
         if a is not None:
             aux0 = _add_aux(aux0, a)
     return x, aux0
@@ -247,7 +254,8 @@ def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return defs
 
 
-def stack_prefill(params, x, cfg: ModelConfig, cache, positions):
+def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
+                  ctx: ctx_lib.MeshContext | None = None):
     """Prefill all layers, filling the cache. Returns (x, new_cache)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
@@ -259,7 +267,7 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions):
         for p in range(cfg.period):
             x, out_cache[f"pos{p}"] = block_prefill(
                 period_params[f"pos{p}"], x, kinds[p], cfg,
-                period_cache[f"pos{p}"], positions)
+                period_cache[f"pos{p}"], positions, ctx=ctx)
         return x, out_cache
 
     body = jax.checkpoint(period_body) if cfg.remat else period_body
@@ -271,11 +279,12 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions):
         for p in range(rem):
             x, new_cache["tail"][f"pos{p}"] = block_prefill(
                 params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
-                cache["tail"][f"pos{p}"], positions)
+                cache["tail"][f"pos{p}"], positions, ctx=ctx)
     return x, new_cache
 
 
-def stack_decode(params, x, cfg: ModelConfig, cache, cur_index):
+def stack_decode(params, x, cfg: ModelConfig, cache, cur_index,
+                 ctx: ctx_lib.MeshContext | None = None):
     """One-token decode through all layers. Returns (x, new_cache)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
@@ -287,7 +296,7 @@ def stack_decode(params, x, cfg: ModelConfig, cache, cur_index):
         for p in range(cfg.period):
             x, out_cache[f"pos{p}"] = block_decode(
                 period_params[f"pos{p}"], x, kinds[p], cfg,
-                period_cache[f"pos{p}"], cur_index)
+                period_cache[f"pos{p}"], cur_index, ctx=ctx)
         return x, out_cache
 
     if full:
@@ -298,5 +307,5 @@ def stack_decode(params, x, cfg: ModelConfig, cache, cur_index):
         for p in range(rem):
             x, new_cache["tail"][f"pos{p}"] = block_decode(
                 params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
-                cache["tail"][f"pos{p}"], cur_index)
+                cache["tail"][f"pos{p}"], cur_index, ctx=ctx)
     return x, new_cache

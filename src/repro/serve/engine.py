@@ -19,6 +19,7 @@ import numpy as np
 from repro.common import param as pm
 from repro.configs.base import ModelConfig
 from repro.models import lm, transformer
+from repro.sharding import context as ctx_lib
 
 
 @dataclasses.dataclass
@@ -30,14 +31,19 @@ class ServeConfig:
 
 
 class ServeEngine:
-    def __init__(self, params, cfg: ModelConfig, sc: ServeConfig):
+    def __init__(self, params, cfg: ModelConfig, sc: ServeConfig,
+                 ctx: ctx_lib.MeshContext | None = None):
         self.params = params
         self.cfg = cfg
         self.sc = sc
+        self.ctx = ctx or ctx_lib.MeshContext.null(
+            plan="decode_std")
         self._prefill = jax.jit(
-            lambda p, b, c: lm.lm_prefill(p, b, c, cfg))
+            lambda p, b, c: lm.lm_prefill(
+                p, b, c, cfg, ctx=self.ctx.with_plan("prefill_tp")
+                if self.ctx.mesh is not None else self.ctx))
         self._decode = jax.jit(
-            lambda p, t, c, i: lm.lm_decode(p, t, c, i, cfg))
+            lambda p, t, c, i: lm.lm_decode(p, t, c, i, cfg, ctx=self.ctx))
 
     def _sample(self, logits: jax.Array, rng) -> jax.Array:
         if self.sc.temperature <= 0.0:

@@ -1,0 +1,301 @@
+"""MeshContext: the explicit sharding context threaded through the program.
+
+The paper's §3.1 scheme — data-parallel standard layers, model-parallel
+experts, combined-batch all-to-all — only composes when every layer agrees
+on which mesh it runs under and which of that mesh's axes an enclosing
+``shard_map`` already holds in Manual mode.  Following GShard's discipline,
+that agreement is *explicit*: a :class:`MeshContext` bundles
+
+* ``mesh``         — the concrete device mesh (or ``None`` off-mesh: the
+                     single-host smoke-test / eager path, where every
+                     constraint is a no-op),
+* ``rules``        — the active :class:`~repro.sharding.partition
+                     .ShardingRules` plan (logical axis → mesh axes),
+* ``manual_axes``  — mesh axes an enclosing ``shard_map`` holds in Manual
+                     mode.  Constraints emitted inside the body strip these
+                     axes: only the Auto axes are GSPMD's to place.  The
+                     pipeline constructs this at its ``shard_map`` boundary
+                     via :meth:`MeshContext.manual` — no runtime reflection.
+
+and is passed down the layer stack as an ordinary argument.  A thin
+contextvar (:func:`current_ctx` / ``with ctx:``) covers entry points that
+jit a closure and cannot add a traced argument (the serve engine, the test
+harness); it is set at the jit/shard_map boundary, read at trace time, and
+never mutated inside traced code.
+
+Version compatibility
+---------------------
+All jax-version probing in the repo lives here (enforced by
+tests/test_version_compat.py).  The pinned jax 0.4.x has no abstract-mesh
+query, no ``jax.set_mesh``, no top-level ``jax.shard_map`` and no
+``axis_types=`` on ``jax.make_mesh``; the shims below degrade gracefully:
+
+* :func:`abstract_mesh_or_none` — ``None`` where the query does not exist,
+* :func:`make_mesh` — drops ``axis_types`` when unsupported,
+* :func:`use_mesh` — no-op context manager when ``jax.set_mesh`` is absent
+  (constraints here are full ``NamedSharding``s, so no ambient mesh is
+  needed),
+* :func:`shard_map` — top-level API when present, else the experimental
+  one with ``auto=`` / ``check_rep=`` spelled for 0.4.x.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import param as pm
+from repro.sharding import partition
+
+
+# ---------------------------------------------------------------------------
+# jax-version compat shims (the ONLY place the repo probes jax's API surface)
+# ---------------------------------------------------------------------------
+
+def abstract_mesh_or_none():
+    """The ambient abstract mesh under jit (jax >= 0.5), or ``None``.
+
+    jax 0.4.x has no ``jax.sharding.get_abstract_mesh``; callers treat
+    ``None`` as "no ambient mesh" and fall back to the explicit context.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    try:
+        mesh = get()
+    except Exception:
+        return None
+    if mesh is None or getattr(mesh, "empty", True):
+        return None
+    return mesh
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                tuple(axis_shapes), tuple(axis_names), devices=devices,
+                axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+        except TypeError:
+            pass  # make_mesh predates axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         devices=devices)
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version
+    (0.4.x returns a one-element list of dicts, newer returns the dict)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def axis_size(axis_name: str) -> int:
+    """Size of a named mapped axis inside shard_map, version-portable.
+
+    ``jax.lax.axis_size`` where it exists; on 0.4.x ``psum(1, axis)``
+    constant-folds to the same Python int."""
+    sz = getattr(jax.lax, "axis_size", None)
+    if sz is not None:
+        return sz(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def use_mesh(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` where it exists, else a no-op context.
+
+    On jax 0.4.x no ambient mesh is needed: every constraint the repo emits
+    is a full ``NamedSharding`` carrying its mesh (see
+    :meth:`MeshContext.with_constraint`)."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+# Whether with_sharding_constraint is usable inside a partially-manual
+# shard_map body.  On 0.4.x the partitioner cannot mix a NamedSharding
+# constraint with manual axes, so constraints under manual mode degrade to
+# identity (the in_specs/out_specs still pin the boundary shardings).
+CAN_CONSTRAIN_UNDER_MANUAL = hasattr(jax, "set_mesh")
+
+
+def shard_map(f, mesh: Mesh, in_specs, out_specs, *,
+              manual_axes: Sequence[str] | None = None):
+    """Version-portable ``shard_map``.
+
+    ``manual_axes=None`` means fully manual (every mesh axis).  Otherwise
+    only the named axes are manual and the rest stay Auto for GSPMD —
+    spelled ``axis_names=``/``check_vma=`` on new jax and
+    ``auto=``/``check_rep=`` on 0.4.x.
+    """
+    top = getattr(jax, "shard_map", None)
+    if top is not None:
+        kw = {}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        try:
+            return top(f, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False, **kw)
+        except TypeError:
+            pass  # older top-level signature; fall through
+    from jax.experimental.shard_map import shard_map as _sm
+    # 0.4.x: partial-auto (`auto=`) lowers axis_index to a PartitionId the
+    # old SPMD partitioner rejects, so degrade to fully manual — the
+    # unnamed axes become replicated inside the body (numerics unchanged;
+    # in-body GSPMD placement of those axes is lost, which is why
+    # CAN_CONSTRAIN_UNDER_MANUAL is False here).
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# MeshContext
+# ---------------------------------------------------------------------------
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_mesh_context", default=None)
+
+
+def _strip(spec: P, manual: frozenset) -> P:
+    """Drop manual mesh axes from a resolved spec (the stage-axis strip)."""
+    if not manual:
+        return spec
+
+    def one(entry):
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a not in manual)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    return P(*(one(e) for e in spec))
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """mesh + sharding plan + Manual-mode axes of an enclosing shard_map."""
+
+    mesh: Mesh | None
+    rules: partition.ShardingRules
+    manual_axes: frozenset = frozenset()
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, plan="dp_tp_ep") -> "MeshContext":
+        """Context for a concrete mesh; ``plan`` is a PLANS name or rules."""
+        return cls(mesh=mesh, rules=_as_rules(plan))
+
+    @classmethod
+    def null(cls, plan="dp_tp_ep") -> "MeshContext":
+        """Off-mesh context: every constraint is the identity."""
+        return cls(mesh=None, rules=_as_rules(plan))
+
+    def with_plan(self, plan) -> "MeshContext":
+        return dataclasses.replace(self, rules=_as_rules(plan))
+
+    def manual(self, *axes: str) -> "MeshContext":
+        """Derived context for a shard_map body manual over ``axes``."""
+        return dataclasses.replace(
+            self, manual_axes=self.manual_axes | frozenset(axes))
+
+    # -- resolution -------------------------------------------------------
+    @property
+    def auto_axes(self) -> tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in self.mesh.axis_names
+                     if a not in self.manual_axes)
+
+    def resolve(self, shape, logical_axes, fallbacks: list | None = None
+                ) -> P:
+        """Logical axes -> PartitionSpec (manual axes stripped)."""
+        assert self.mesh is not None, "resolve() needs a concrete mesh"
+        spec = partition.resolve_spec(self.rules, self.mesh, shape,
+                                      logical_axes, fallbacks)
+        return _strip(spec, self.manual_axes)
+
+    def shd(self, shape, logical_axes, fallbacks: list | None = None
+            ) -> NamedSharding:
+        return NamedSharding(self.mesh,
+                             self.resolve(shape, logical_axes, fallbacks))
+
+    def tree_shardings(self, def_tree, fallbacks: list | None = None):
+        """NamedSharding tree for a ParamDef tree.
+
+        (For bare PartitionSpec trees — shard_map in_specs — use
+        ``partition.tree_pspecs`` with ``ctx.rules``/``ctx.mesh``.)"""
+        def one(d: pm.ParamDef):
+            return self.shd(d.shape, d.axes, fallbacks)
+        return jax.tree_util.tree_map(one, def_tree, is_leaf=pm.is_def)
+
+    # -- constraints ------------------------------------------------------
+    def with_constraint(self, x, logical_axes):
+        """Apply a logical sharding constraint inside jit (no-op off-mesh).
+
+        Off-mesh (``mesh is None`` and no ambient abstract mesh) this is the
+        identity — the single-device smoke-test path.  Under a Manual-mode
+        enclosing shard_map on jax 0.4.x, constraints degrade to identity
+        (the partitioner cannot mix NamedSharding constraints with manual
+        axes there); the shard_map's own specs still pin the boundaries.
+        """
+        mesh = self.mesh
+        if mesh is None:
+            mesh = abstract_mesh_or_none()
+            if mesh is None:
+                return x
+        spec = _strip(
+            partition.resolve_spec(self.rules, mesh, x.shape, logical_axes),
+            self.manual_axes)
+        if all(e is None for e in spec):
+            return x
+        if self.manual_axes and not CAN_CONSTRAIN_UNDER_MANUAL:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    # -- contextvar plumbing ---------------------------------------------
+    def __enter__(self) -> "MeshContext":
+        tokens = getattr(self, "_tokens", None)
+        if tokens is None:
+            tokens = []
+            object.__setattr__(self, "_tokens", tokens)
+        tokens.append(_CTX.set(self))
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.reset(getattr(self, "_tokens").pop())
+        return False
+
+
+def _as_rules(plan) -> partition.ShardingRules:
+    if isinstance(plan, str):
+        return partition.PLANS[plan]
+    return plan
+
+
+def current_ctx() -> MeshContext | None:
+    """The innermost active context (``with ctx:``), or ``None``."""
+    return _CTX.get()
+
+
+def with_constraint(x, logical_axes, ctx: MeshContext | None = None):
+    """Explicit-first constraint: use ``ctx`` if given, else the contextvar,
+    else the ambient abstract mesh (jax >= 0.5), else identity."""
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        mesh = abstract_mesh_or_none()
+        if mesh is None:
+            return x
+        ctx = MeshContext(mesh=mesh, rules=partition.PLANS["dp_tp_ep"])
+    return ctx.with_constraint(x, logical_axes)

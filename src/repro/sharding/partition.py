@@ -110,30 +110,8 @@ def shd(rules: ShardingRules, mesh: Mesh, shape, axes,
                                             fallbacks))
 
 
-def with_constraint(x, rules: ShardingRules, logical_axes):
-    """Apply a logical sharding constraint inside jit (no-op off-mesh).
-
-    Axes the surrounding shard_map holds in Manual mode (e.g. the pipeline
-    stage axis) are stripped from the spec — inside a stage body only the
-    Auto axes are GSPMD's to place."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return x
-    spec = resolve_spec(rules, mesh, x.shape, logical_axes)
-    manual = {name for name, t in getattr(mesh, "_name_to_type",
-                                          {}).items()
-              if str(t) == "AxisType.Manual"}
-    if manual:
-        def strip(entry):
-            if entry is None:
-                return None
-            axes = entry if isinstance(entry, tuple) else (entry,)
-            kept = tuple(a for a in axes if a not in manual)
-            if not kept:
-                return None
-            return kept if len(kept) > 1 else kept[0]
-        spec = P(*(strip(e) for e in spec))
-    return jax.lax.with_sharding_constraint(x, spec)
+# (Constraints live in repro.sharding.context: pass a MeshContext down the
+# stack and call ``context.with_constraint(x, logical_axes, ctx)``.)
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.sharding import context as ctx_lib
+
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     xf = jnp.asarray(x, jnp.float32)
@@ -40,7 +42,7 @@ def ef_compress_sync(grads, ef_state, axis_name: str):
     Returns (synced_grads, new_ef_state).  ef_state is a float32 tree
     matching grads (zeros at step 0).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = ctx_lib.axis_size(axis_name)
 
     def one(g, ef):
         e = jnp.asarray(g, jnp.float32) + ef

@@ -13,9 +13,10 @@ Construction (validated fwd+bwd against the sequential stack in
 tests/test_pipeline.py):
 
 * mesh axes: the ``data`` axis becomes the ``stage`` ring; ``model`` stays
-  tensor/expert-parallel *inside* each stage (shard_map is manual over the
-  stage axis only, ``axis_names={'stage-axis'}``; GSPMD keeps handling the
-  model axis within the stage body).
+  tensor/expert-parallel *inside* each stage (the context.shard_map wrapper
+  is manual over the stage axis only; GSPMD keeps handling the model axis
+  within the stage body, and the stage body's MeshContext records the stage
+  axis as Manual so layer constraints strip it).
 * layers: stacked [n_stages, layers_per_stage, ...] with the leading dim
   sharded over the stage axis.  Ragged depths (kimi's 61 layers on 16
   stages) pad to the next multiple with *identity* layers — zero output
@@ -44,6 +45,7 @@ from repro.common import param as pm
 from repro.configs.base import ModelConfig, layer_kinds
 from repro.models import lm, layers, transformer
 from repro.optim import optimizers as opt_lib
+from repro.sharding import context as ctx_lib
 
 
 def stages_for(cfg: ModelConfig, n_stages: int) -> tuple[int, int]:
@@ -102,20 +104,30 @@ def zero_identity_padding(params, cfg: ModelConfig, n_stages: int):
 
 def pipeline_stack_apply(block_params, x_mb, cfg: ModelConfig, *,
                          mesh, n_stages: int, stage_axis: str = "data",
-                         positions, rng, train: bool = True):
+                         positions, rng, train: bool = True,
+                         ctx: ctx_lib.MeshContext | None = None):
     """Run the pipelined layer stack.
 
     block_params: stacked [S, per, ...] tree (leading dim sharded over the
     stage axis).  x_mb: [n_micro, B_mb, S_seq, d].  Returns
     (y_mb [n_micro, B_mb, S_seq, d], aux_loss scalar).
+
+    The stage body runs under a derived context that records the stage
+    axis as Manual — layer-internal constraints strip it automatically
+    (no runtime mesh reflection).
     """
     n_micro = x_mb.shape[0]
     kind = layer_kinds(cfg)[0]
     per = stages_for(cfg, n_stages)[0]
+    ctx = ctx or ctx_lib.MeshContext.for_mesh(mesh)
+    stage_ctx = ctx.manual(stage_axis)
 
     def stage_body(params_stage, x, mb_rng):
         # params_stage: [per, ...] one stage's layers; x: [B_mb, S, d]
-        aux = jnp.zeros((), jnp.float32)
+        # aux is rank-1 throughout: 0.4.x shard_map lifts closed-over
+        # scalar constants as replicated inputs and its transpose-time
+        # unmentioned-axis psum helper assumes ndim >= 1.
+        aux = jnp.zeros((1,), jnp.float32)
 
         def layer_step(carry, xs):
             x, aux = carry
@@ -124,7 +136,7 @@ def pipeline_stack_apply(block_params, x_mb, cfg: ModelConfig, *,
                    else None)
             x, a = transformer.block_apply(p_layer, x, kind, cfg,
                                            positions=positions, rng=sub,
-                                           train=train)
+                                           train=train, ctx=stage_ctx)
             if a is not None:
                 aux = aux + a["aux_loss"]
             return (x, aux), None
@@ -138,7 +150,7 @@ def pipeline_stack_apply(block_params, x_mb, cfg: ModelConfig, *,
         sid = jax.lax.axis_index(stage_axis)
         state = jnp.zeros_like(xs_all[0])
         outputs = jnp.zeros_like(xs_all)
-        aux_total = jnp.zeros((), jnp.float32)
+        aux_total = jnp.zeros((1,), jnp.float32)
         t_total = n_micro + n_stages - 1
 
         def tick(carry, t):
@@ -167,25 +179,26 @@ def pipeline_stack_apply(block_params, x_mb, cfg: ModelConfig, *,
         outputs = jax.lax.psum(
             jnp.where(sid == n_stages - 1, outputs, 0.0), stage_axis)
         # per-microbatch balance losses averaged over microbatches (same
-        # normalization as the grad-accumulation trainer).
+        # normalization as the grad-accumulation trainer); rank-1, see
+        # note above.
         aux_total = jax.lax.psum(aux_total, stage_axis) / n_micro
         return outputs, aux_total
 
     from jax.sharding import PartitionSpec as P
-    fn = jax.shard_map(
-        per_stage,
-        mesh=mesh,
-        in_specs=(P(stage_axis), P()),
-        out_specs=(P(), P()),
-        axis_names={stage_axis},
-        check_vma=False)
-    return fn(block_params, x_mb)
+    fn = ctx_lib.shard_map(
+        per_stage, mesh,
+        (P(stage_axis), P()),
+        (P(), P()),
+        manual_axes=(stage_axis,))
+    y_mb, aux = fn(block_params, x_mb)
+    return y_mb, aux[0]
 
 
 def pipeline_lm_loss(params, batch, cfg: ModelConfig, *, mesh,
                      n_stages: int, n_micro: int,
                      stage_axis: str = "data", rng=None,
-                     train: bool = True):
+                     train: bool = True,
+                     ctx: ctx_lib.MeshContext | None = None):
     """Full LM loss with the block stack pipelined.
 
     params: {"embed", "blocks" (stacked pipeline defs), "ln_f", "unembed"}.
@@ -199,11 +212,12 @@ def pipeline_lm_loss(params, batch, cfg: ModelConfig, *, mesh,
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b // n_micro, s))
     y_mb, aux = pipeline_stack_apply(
         params["blocks"], x_mb, cfg, mesh=mesh, n_stages=n_stages,
-        stage_axis=stage_axis, positions=positions, rng=rng, train=train)
+        stage_axis=stage_axis, positions=positions, rng=rng, train=train,
+        ctx=ctx)
     y = y_mb.reshape(b, s, -1)
     y = layers.rmsnorm(params["ln_f"], y, cfg.norm_eps)
     xent = lm.chunked_xent(params, y, labels, cfg,
-                           chunk=min(512, s))
+                           chunk=min(512, s), ctx=ctx)
     loss = xent + aux
     return loss, {"xent": xent, "aux_loss": aux, "loss": loss}
 
@@ -223,11 +237,14 @@ def pipeline_param_defs(cfg: ModelConfig, n_stages: int) -> dict:
 
 def make_pipeline_train_step(cfg: ModelConfig, oc: opt_lib.OptConfig, *,
                              mesh, n_stages: int, n_micro: int,
-                             stage_axis: str = "data"):
+                             stage_axis: str = "data",
+                             ctx: ctx_lib.MeshContext | None = None):
+    ctx = ctx or ctx_lib.MeshContext.for_mesh(mesh)
+
     def loss_fn(params, batch, rng):
         return pipeline_lm_loss(params, batch, cfg, mesh=mesh,
                                 n_stages=n_stages, n_micro=n_micro,
-                                stage_axis=stage_axis, rng=rng)
+                                stage_axis=stage_axis, rng=rng, ctx=ctx)
 
     def train_step(state, batch, seed):
         rng = jax.random.PRNGKey(seed)

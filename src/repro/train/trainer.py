@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim import optimizers as opt_lib
+from repro.sharding import context as ctx_lib
 from repro.train.checkpoint import CheckpointManager
 
 
@@ -104,7 +105,12 @@ def make_train_step(loss_fn: Callable, oc: opt_lib.OptConfig, *,
 class Trainer:
     def __init__(self, *, loss_fn, params, oc: opt_lib.OptConfig,
                  loop: TrainLoopConfig, data_iter, workdir: str,
-                 jit: bool = True, crash_at_step: int | None = None):
+                 jit: bool = True, crash_at_step: int | None = None,
+                 ctx: ctx_lib.MeshContext | None = None):
+        # The sharding context is entered around step tracing so loss
+        # closures that consult current_ctx() (instead of binding ctx
+        # explicitly) still resolve the right mesh/plan.
+        self.ctx = ctx
         self.loop = loop
         self.data_iter = data_iter
         self.workdir = workdir
@@ -153,11 +159,18 @@ class Trainer:
         last_metrics = {}
         for step in range(self.start_step, self.loop.total_steps):
             if self.crash_at_step is not None and step == self.crash_at_step:
+                # Test hook: let any in-flight async checkpoint complete so
+                # the crash point is deterministic (a real SIGKILL may lose
+                # the newest checkpoint; restore falls back to the previous
+                # complete one either way).
+                self.ckpt.wait()
                 raise RuntimeError(f"injected crash at step {step}")
             batch = next(self.data_iter)
             t0 = time.perf_counter()
-            self.state, metrics = self.step_fn(
-                self.state, batch, jax.random.fold_in(rng, step))
+            with (self.ctx if self.ctx is not None
+                  else ctx_lib.MeshContext.null()):
+                self.state, metrics = self.step_fn(
+                    self.state, batch, jax.random.fold_in(rng, step))
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self._heartbeat(step)

@@ -1,9 +1,30 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device;
-only launch/dryrun.py forces 512 placeholder devices.  Multi-device tests
-spawn subprocesses with their own XLA_FLAGS (see test_distributed.py)."""
+"""Shared fixtures + tier-1 test selection.
+
+NOTE: no XLA_FLAGS here — tests see 1 CPU device; only launch/dryrun.py
+forces 512 placeholder devices.  Multi-device tests spawn subprocesses
+with their own XLA_FLAGS (see test_distributed.py).
+
+Tier-1 selection: a bare ``pytest`` run deselects ``slow`` (and ``tpu``)
+tests — the default is effectively ``-m "not slow and not tpu"``.  Passing
+a non-empty ``-m`` expression disables the default and runs exactly what
+you asked for: ``-m slow`` for the slow tier (``make test-slow``),
+``-m "not tpu"`` for everything runnable off-TPU (``make test-all``).
+Markers themselves are registered in pyproject.toml."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.option.markexpr:
+        return          # explicit -m wins
+    deselected = [i for i in items
+                  if "slow" in i.keywords or "tpu" in i.keywords]
+    if not deselected:
+        return
+    dropped = set(map(id, deselected))
+    config.hook.pytest_deselected(items=deselected)
+    items[:] = [i for i in items if id(i) not in dropped]
 
 
 @pytest.fixture(scope="session")

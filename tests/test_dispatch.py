@@ -1,10 +1,29 @@
-"""Dispatch/combine invariants (capacity semantics, sort == einsum)."""
+"""Dispatch/combine invariants (capacity semantics, sort == einsum).
+
+Property tests run under hypothesis when it is installed (dev
+requirement); without it they skip and the plain parametrized grid below
+still covers the same invariants at fixed points.
+"""
+import importlib.util
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import dispatch as dsp
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+# (t, e, k, cf, seed) grid for the non-hypothesis fallback: edge capacity
+# factors, k=1 and k=e, tiny and largish token counts.
+GRID = [
+    (4, 2, 1, 0.5, 0),
+    (16, 4, 2, 1.0, 1),
+    (33, 7, 3, 1.5, 2),
+    (64, 16, 4, 4.0, 3),
+    (8, 2, 2, 0.75, 4),
+]
 
 
 def _random_assignment(t, e, k, seed):
@@ -15,10 +34,7 @@ def _random_assignment(t, e, k, seed):
     return idx.astype(jnp.int32), w
 
 
-@settings(deadline=None, max_examples=25)
-@given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
-       cf=st.floats(0.5, 4.0), seed=st.integers(0, 100))
-def test_sort_equals_einsum(t, e, k, cf, seed):
+def _check_sort_equals_einsum(t, e, k, cf, seed):
     idx, w = _random_assignment(t, e, k, seed)
     cap = dsp.capacity_for(t, e, k, cf)
     p = dsp.plan(idx, w, e, cap)
@@ -33,13 +49,7 @@ def test_sort_equals_einsum(t, e, k, cf, seed):
                                rtol=1e-4, atol=1e-5)
 
 
-@settings(deadline=None, max_examples=25)
-@given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
-       seed=st.integers(0, 100))
-def test_identity_roundtrip_when_capacity_sufficient(t, e, k, seed):
-    """With capacity >= T nothing drops: combine(dispatch(x)) == x scaled by
-    the sum of weights (each token contributes w_k * x through expert slots
-    when the 'expert' is the identity)."""
+def _check_identity_roundtrip(t, e, k, seed):
     idx, w = _random_assignment(t, e, k, seed)
     p = dsp.plan(idx, w, e, capacity=t * k)
     assert float(p.fraction_dropped) == 0.0
@@ -49,6 +59,47 @@ def test_identity_roundtrip_when_capacity_sufficient(t, e, k, seed):
     wsum = np.asarray(jnp.sum(w, axis=1, keepdims=True))
     np.testing.assert_allclose(np.asarray(y), np.asarray(x) * wsum,
                                rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("t,e,k,cf,seed", GRID)
+def test_sort_equals_einsum(t, e, k, cf, seed):
+    _check_sort_equals_einsum(t, e, k, cf, seed)
+
+
+@pytest.mark.parametrize("t,e,k,cf,seed", GRID)
+def test_identity_roundtrip_when_capacity_sufficient(t, e, k, cf, seed):
+    """With capacity >= T nothing drops: combine(dispatch(x)) == x scaled by
+    the sum of weights (each token contributes w_k * x through expert slots
+    when the 'expert' is the identity)."""
+    _check_identity_roundtrip(t, e, k, seed)
+
+
+def test_sort_equals_einsum_property():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (dev req)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=25)
+    @given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
+           cf=st.floats(0.5, 4.0), seed=st.integers(0, 100))
+    def prop(t, e, k, cf, seed):
+        _check_sort_equals_einsum(t, e, k, cf, seed)
+
+    prop()
+
+
+def test_identity_roundtrip_property():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (dev req)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=25)
+    @given(t=st.integers(4, 64), e=st.integers(2, 16), k=st.integers(1, 4),
+           seed=st.integers(0, 100))
+    def prop(t, e, k, seed):
+        _check_identity_roundtrip(t, e, k, seed)
+
+    prop()
 
 
 def test_capacity_drop_order():

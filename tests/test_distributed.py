@@ -34,8 +34,9 @@ def test_shard_map_ep_matches_reference():
         from repro.common import param as pm
         from repro.core.moe import MoEArgs, moe_defs, moe_apply
         from repro.core.expert_parallel import moe_apply_ep
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.sharding import context
+        mesh = context.make_mesh((2, 4), ("data", "model"))
+        ctx = context.MeshContext.for_mesh(mesh, "dp_tp_ep")
         a = MoEArgs(n_experts=8, k=2, d_model=16, d_ff=32,
                     dtype=jnp.float32, capacity_factor=8.0,
                     eval_capacity_factor=8.0)
@@ -43,9 +44,8 @@ def test_shard_map_ep_matches_reference():
         params["gate"]["wg"] = 0.5 * jax.random.normal(
             jax.random.PRNGKey(7), params["gate"]["wg"].shape)
         x = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
-        with jax.set_mesh(mesh):
-            y_ep, aux = jax.jit(lambda p, x: moe_apply_ep(
-                p, x, a, mesh, train=False))(params, x)
+        y_ep, aux = jax.jit(lambda p, x: moe_apply_ep(
+            p, x, a, train=False, ctx=ctx))(params, x)
         y_ref, _ = moe_apply(params, x, a, train=False)
         np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref),
                                    rtol=2e-4, atol=2e-5)
@@ -58,9 +58,10 @@ def test_gspmd_moe_sharded_matches_single_device():
     out = _run("""
         from repro.common import param as pm
         from repro.core.moe import MoEArgs, moe_defs, moe_apply
+        from repro.sharding import context
         from jax.sharding import PartitionSpec as P, NamedSharding
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = context.make_mesh((2, 4), ("data", "model"))
+        ctx = context.MeshContext.for_mesh(mesh, "dp_tp_ep")
         a = MoEArgs(n_experts=8, k=2, d_model=16, d_ff=32,
                     dtype=jnp.float32, capacity_factor=8.0,
                     eval_capacity_factor=8.0)
@@ -69,12 +70,11 @@ def test_gspmd_moe_sharded_matches_single_device():
             jax.random.PRNGKey(7), params["gate"]["wg"].shape)
         x = jax.random.normal(jax.random.PRNGKey(1), (128, 16))
         y1, _ = moe_apply(params, x, a, train=False)
-        with jax.set_mesh(mesh):
-            xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
-            ps = jax.device_put(
-                params, NamedSharding(mesh, P()))
-            y2, _ = jax.jit(lambda p, x: moe_apply(p, x, a, train=False))(
-                ps, xs)
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
+        ps = jax.device_put(
+            params, NamedSharding(mesh, P()))
+        y2, _ = jax.jit(lambda p, x: moe_apply(p, x, a, train=False,
+                                               ctx=ctx))(ps, xs)
         np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                    rtol=2e-4, atol=2e-5)
         print("GSPMD_OK")
@@ -89,10 +89,9 @@ def test_elastic_remesh_restore(tmp_path):
     out = _run(f"""
         from repro.common import param as pm
         from repro.train.checkpoint import CheckpointManager
-        from repro.sharding import partition
+        from repro.sharding import context
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = context.make_mesh((4, 2), ("data", "model"))
         tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
         sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
         tree = jax.device_put(tree, sh)
@@ -103,9 +102,9 @@ def test_elastic_remesh_restore(tmp_path):
     assert "SAVED" in out
     out = _run(f"""
         from repro.train.checkpoint import CheckpointManager
+        from repro.sharding import context
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = context.make_mesh((2, 2), ("data", "model"))
         like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
         sh = {{"w": NamedSharding(mesh, P("model", "data"))}}
         mgr = CheckpointManager({ckpt!r})
@@ -123,19 +122,17 @@ def test_ef_compression_sync_multidevice():
     """int8 EF gradient sync over a 2-pod axis: mean within quantization
     error on step one, unbiased accumulated over steps."""
     out = _run("""
-        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.sharding import context
         from repro.train.compression import ef_compress_sync, init_ef_state
-        mesh = jax.make_mesh((2,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = context.make_mesh((2,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (2, 64))
         true_mean = jnp.mean(g, axis=0)
         def sync(g, ef):
             return ef_compress_sync({"g": g}, {"g": ef}, "pod")
-        fn = shard_map(sync, mesh=mesh,
-                       in_specs=(P("pod"), P("pod")),
-                       out_specs=({"g": P("pod")}, {"g": P("pod")}),
-                       check_rep=False)
+        fn = context.shard_map(sync, mesh,
+                               (P("pod"), P("pod")),
+                               ({"g": P("pod")}, {"g": P("pod")}))
         synced, ef = fn(g.reshape(2, 64)[:, :],
                         jnp.zeros((2, 64)))
         got = np.asarray(synced["g"])[0]
@@ -154,8 +151,8 @@ def test_dryrun_cell_smoke():
         from repro.configs import shapes as shp
         from repro.configs.base import get_config
         from repro.launch.steps import lower_cell
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.sharding import context
+        mesh = context.make_mesh((4, 4), ("data", "model"))
         cfg = get_config("smollm-135m")
         lowered, spec = lower_cell(cfg, shp.SHAPES["decode_32k"], mesh)
         compiled = lowered.compile()

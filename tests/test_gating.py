@@ -1,9 +1,13 @@
-"""Gating-network unit + property tests (Eqs. 2-5, 8-10, 16-20)."""
+"""Gating-network unit + property tests (Eqs. 2-5, 8-10, 16-20).
+
+The top-k invariant check runs as a hypothesis property test when
+hypothesis is installed (dev requirement) and always as a fixed
+parametrized grid, so the module collects and covers the invariant either
+way."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.common import param as pm
 from repro.core import gating, losses
@@ -34,10 +38,7 @@ def test_zero_init_is_balanced():
     assert float(losses.cv_squared(info.load)) < 0.05
 
 
-@settings(deadline=None, max_examples=20)
-@given(t=st.integers(4, 64), e=st.integers(2, 32), k=st.integers(1, 4),
-       seed=st.integers(0, 1000))
-def test_noisy_topk_invariants(t, e, k, seed):
+def _check_noisy_topk_invariants(t, e, k, seed):
     k = min(k, e)
     p = _params(8, e, key=seed)
     x = jax.random.normal(jax.random.PRNGKey(seed + 7), (t, 8))
@@ -53,6 +54,31 @@ def test_noisy_topk_invariants(t, e, k, seed):
         np.testing.assert_allclose(g[i, idx[i]], w[i], rtol=1e-5)
     # weights sorted descending (top-k order)
     assert (np.diff(w, axis=1) <= 1e-6).all()
+
+
+@pytest.mark.parametrize("t,e,k,seed", [
+    (4, 2, 1, 0),
+    (16, 8, 2, 11),
+    (33, 32, 4, 22),
+    (64, 5, 3, 33),
+    (7, 4, 4, 44),
+])
+def test_noisy_topk_invariants(t, e, k, seed):
+    _check_noisy_topk_invariants(t, e, k, seed)
+
+
+def test_noisy_topk_invariants_property():
+    pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (dev req)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=20)
+    @given(t=st.integers(4, 64), e=st.integers(2, 32), k=st.integers(1, 4),
+           seed=st.integers(0, 1000))
+    def prop(t, e, k, seed):
+        _check_noisy_topk_invariants(t, e, k, seed)
+
+    prop()
 
 
 def test_load_estimator_matches_empirical_load():

@@ -32,11 +32,10 @@ def test_pipeline_matches_sequential():
         from repro.configs.base import get_config
         from repro.models import lm
         from repro.train import pipeline as pp
-        from repro.sharding.partition import PLANS
+        from repro.sharding import context
         import repro.models.transformer as tr
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = context.make_mesh((4, 2), ("data", "model"))
         # 7 layers over 4 stages => padded to 8 with one identity layer.
         cfg = get_config("kimi-k2-1t-a32b").replace(
             n_layers=7, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
@@ -81,10 +80,9 @@ def test_pipeline_matches_sequential():
         loss_seq, _ = lm.lm_loss(seq_params, batch, cfg, rng=None,
                                  train=False)
 
-        with jax.set_mesh(mesh):
-            loss_pp, m = jax.jit(lambda p, b: pp.pipeline_lm_loss(
-                p, b, cfg, mesh=mesh, n_stages=n_stages,
-                n_micro=n_micro, train=False))(pp_params, batch)
+        loss_pp, m = jax.jit(lambda p, b: pp.pipeline_lm_loss(
+            p, b, cfg, mesh=mesh, n_stages=n_stages,
+            n_micro=n_micro, train=False))(pp_params, batch)
         print("SEQ", float(loss_seq), "PP", float(loss_pp))
         np.testing.assert_allclose(float(loss_pp), float(loss_seq),
                                    rtol=2e-4)
@@ -97,8 +95,7 @@ def test_pipeline_matches_sequential():
                                        train=False)[0]
         def f_seq(p):
             return lm.lm_loss(p, batch, cfg, rng=None, train=False)[0]
-        with jax.set_mesh(mesh):
-            g_pp = jax.jit(jax.grad(f_pp))(pp_params)
+        g_pp = jax.jit(jax.grad(f_pp))(pp_params)
         g_seq = jax.grad(f_seq)(seq_params)
         a = np.asarray(g_pp["blocks"]["attn"]["wq"]).reshape(
             total, *g_seq["blocks"]["periods"]["pos0"]["attn"]["wq"]

@@ -65,15 +65,15 @@ def test_analytic_flops_match_xla_on_unrolled_model():
         from repro.configs.shapes import ShapeSpec
         from repro.launch.analytic import analyze_cell
         from repro.launch.steps import lower_cell
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.sharding import context
+        mesh = context.make_mesh((4, 4), ("data", "model"))
         cfg = get_config("smollm-135m").replace(
             n_layers=2, scan_layers=False, remat=False,
             q_block=512, kv_block=512)
         shape = ShapeSpec("train_tiny", "train", 512, 8)
         lowered, spec = lower_cell(cfg, shape, mesh)
         compiled = lowered.compile()
-        xla = compiled.cost_analysis()["flops"]
+        xla = context.compiled_cost_analysis(compiled)["flops"]
         ana = analyze_cell(cfg, shape, mesh, "dp_tp_ep").flops_per_dev
         ratio = ana / xla
         print("RATIO", ratio)

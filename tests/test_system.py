@@ -43,10 +43,13 @@ def test_capacity_scaling_moe_beats_matched_dense(tmp_path):
     model can memorize — capacity, not compute, is the limiter."""
     dc = DataConfig(vocab_size=32, seq_len=16, batch_size=64,
                     n_clusters=64, noise_prob=0.01, seed=5)
-    dense = _train_paper(dict(variant="moe", n_experts=2, k=2), 500, dc,
+    # 1500 steps: the capacity separation only emerges once both models
+    # pass the shared-structure learning phase (at 500 steps the bigger
+    # gate is still paying its balance-loss tax and loses).
+    dense = _train_paper(dict(variant="moe", n_experts=2, k=2), 1500, dc,
                          str(tmp_path / "dense"), d_model=16,
                          expert_hidden=16)
-    moe = _train_paper(dict(variant="moe", n_experts=8, k=2), 500, dc,
+    moe = _train_paper(dict(variant="moe", n_experts=8, k=2), 1500, dc,
                        str(tmp_path / "moe8"), d_model=16,
                        expert_hidden=16)
     assert moe["xent"] < dense["xent"], (moe["xent"], dense["xent"])
