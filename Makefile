@@ -4,11 +4,17 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test-tier1 test-slow test-all bench-micro
+.PHONY: test-tier1 test-slow test-all test-kernels bench-micro
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
 	$(PY) -m pytest -q
+
+# Kernel parity + gradient + backend-equivalence suite (part of tier-1;
+# this target runs just it, pinned to CPU interpret mode).
+test-kernels:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_kernels.py \
+		tests/test_kernel_grads.py tests/test_kernel_backend.py
 
 # The slow tier (multi-device subprocess equivalence, training curves).
 test-slow:

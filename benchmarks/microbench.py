@@ -1,8 +1,11 @@
 """Micro-benchmarks of the MoE hot path on this host (CPU): gating,
-dispatch (sort vs einsum), expert FFN (einsum vs Pallas-interpret), and a
-full layer step.  Wall times are CPU-only and NOT the TPU numbers (those
-come from §Roofline); `derived` carries the arithmetic each call performs
-so the CSV is meaningful across hosts.
+dispatch (sort vs einsum), expert FFN (einsum vs Pallas-interpret), a
+full layer step, and the ``kernel_backend`` section — ref vs pallas for
+each registry op (gmm, topk_gating, dispatch/combine) so BENCH_micro.json
+tracks the backend perf trajectory PR-over-PR.  Wall times are CPU-only
+and NOT the TPU numbers (those come from §Roofline; the pallas rows here
+measure the *interpret-mode* kernels); `derived` carries the arithmetic
+each call performs so the CSV is meaningful across hosts.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ from repro.common import param as pm
 from repro.core import dispatch as dsp
 from repro.core import gating
 from repro.core.moe import MoEArgs, moe_apply, moe_defs
+from repro.kernels import backend as bk_lib
 
 T, D, E, K, FF = 4096, 64, 32, 4, 128
 
@@ -38,6 +42,9 @@ def run():
     emit("micro_dispatch_plan_sort", us, f"T*k={T*K} assignments")
 
     p = plan(info.expert_index, info.combine_weights)
+    # jit turned the plan's static int fields into arrays; the kernel
+    # backends need them back as Python ints (shape parameters).
+    p = p._replace(n_experts=E, capacity=cap)
     # plan carries static ints: close over it rather than passing through jit
     d_sort = jax.jit(lambda x: dsp.dispatch(x, p))
     us = time_call(d_sort, x)
@@ -57,6 +64,36 @@ def run():
     full = jax.jit(lambda pr, x: moe_apply(pr, x, a, train=False)[0])
     us = time_call(full, params, x)
     emit("micro_moe_layer_full", us, f"T={T} E={E} k={K} cap={cap}")
+
+    # --- kernel_backend section: ref vs pallas per registry op ----------
+    # (pallas rows are interpret-mode on CPU hosts — the trajectory shows
+    # the dispatch overhead trend, not MXU throughput.)
+    logits = info.raw_logits
+    for name in ("ref", "pallas"):
+        bk = bk_lib.get(name)
+        aN = MoEArgs(n_experts=E, k=K, d_model=D, d_ff=FF,
+                     dtype=jnp.float32, kernel_backend=name)
+        ffn = jax.jit(lambda pr, b, _bk=bk, _a=aN: _bk.expert_ffn(pr, b, _a))
+        us = time_call(ffn, params, buf)
+        emit(f"kernel_backend_gmm_{name}", us,
+             f"expert_ffn GFLOP={flops/1e9:.2f}")
+        if bk.topk_impl is None:
+            # match the production ref gating path: top-(k+1) values AND
+            # indices (load-estimator threshold), softmax over the first k
+            def tk_ref(l):
+                tv, ti = jax.lax.top_k(l, K + 1)
+                return jax.nn.softmax(tv[:, :K], axis=-1), ti, tv
+            tk = jax.jit(tk_ref)
+        else:
+            tk = jax.jit(lambda l, _f=bk.topk_impl: _f(l, K, K + 1))
+        us = time_call(tk, logits)
+        emit(f"kernel_backend_topk_{name}", us, f"T={T} E={E} k+1={K+1}")
+        dc = jax.jit(lambda x, _bk=bk, _a=aN: _bk.combine(
+            _bk.dispatch(x, p, _a), p, _a))
+        us = time_call(dc, x)
+        emit(f"kernel_backend_dispatch_combine_{name}", us,
+             f"[{T},{D}]<->[{E},{cap},{D}] fused" if name == "pallas"
+             else f"[{T},{D}]<->[{E},{cap},{D}] scatter+gather")
 
 
 if __name__ == "__main__":

@@ -73,8 +73,11 @@ class ModelConfig:
     # attention blocking (perf knobs; see EXPERIMENTS.md §Perf)
     q_block: int = 512
     kv_block: int = 512
-    expert_impl: str = "einsum"            # einsum | pallas
+    expert_impl: str = "einsum"            # legacy spelling of kernel_backend
     dispatch_impl: str = "sort"
+    # Kernel backend for the MoE hot path ("ref" | "pallas"); None derives
+    # from expert_impl.  See src/repro/kernels/backend.py and docs/kernels.md.
+    kernel_backend: str | None = None
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -33,15 +33,20 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import dispatch as dsp
 from repro.core import gating, losses
 from repro.core.moe import MoEArgs
+from repro.kernels import backend as backend_lib
 from repro.sharding import context as ctx_lib
 
 
 def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
-               ep_axis: str, fsdp_axis: str | None, ep: int):
+               ep_axis: str, fsdp_axis: str | None, ep: int,
+               bk: backend_lib.KernelBackend,
+               body_ctx: ctx_lib.MeshContext | None):
     """Body executed per shard under shard_map.
 
     ``ep`` is the ep-axis size, passed from the mesh at the shard_map
-    boundary (0.4.x jax cannot query a mapped axis's size by name)."""
+    boundary (0.4.x jax cannot query a mapped axis's size by name).
+    ``bk`` is the resolved kernel backend; ``body_ctx`` the Manual-mode
+    context its ops use to derive per-shard block specs."""
     ep_rank = jax.lax.axis_index(ep_axis)
     t_local, d = x_local.shape
     assert a.n_experts % ep == 0, (a.n_experts, ep)
@@ -54,11 +59,12 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
             rng = jax.random.fold_in(rng, jax.lax.axis_index(fsdp_axis))
 
     info = gating.noisy_topk_gating(params["gate"], x_local, a.k,
-                                    train=train, rng=rng)
+                                    train=train, rng=rng,
+                                    topk_impl=bk.topk_impl)
     capacity = dsp.capacity_for(t_local, a.n_experts, a.k, a.capacity_factor)
     p = dsp.plan(info.expert_index, info.combine_weights, a.n_experts,
                  capacity, priority=a.priority_dispatch)
-    buf = dsp.dispatch(x_local, p)                     # [E, C, d] local
+    buf = bk.dispatch(x_local, p, a)                   # [E, C, d] local
 
     # all_to_all #1: expert-major exchange.  [E, C, d] -> [E/ep, ep*C, d]
     buf = buf.reshape(ep, e_local, capacity, d)
@@ -72,18 +78,14 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
             return w
         return jax.lax.all_gather(w, fsdp_axis, axis=dim, tiled=True)
 
-    w1 = gather_w(params["w1"], 1).astype(a.dtype)     # [e_local, d, f]
-    w2 = gather_w(params["w2"], 2).astype(a.dtype)     # [e_local, f, d]
-    h = jnp.einsum("ecd,edf->ecf", buf, w1,
-                   preferred_element_type=jnp.float32)
+    w_local = {"w1": gather_w(params["w1"], 1),        # [e_local, d, f]
+               "w2": gather_w(params["w2"], 2)}        # [e_local, f, d]
     if a.activation == "swiglu":
-        w3 = gather_w(params["w3"], 1).astype(a.dtype)
-        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, w3,
-                                        preferred_element_type=jnp.float32)
-    else:
-        h = jax.nn.relu(h)
-    out = jnp.einsum("ecf,efd->ecd", h.astype(a.dtype), w2,
-                     preferred_element_type=jnp.float32).astype(a.dtype)
+        w_local["w3"] = gather_w(params["w3"], 1)
+    # The combined batch for the local experts, through the kernel backend:
+    # the ops see the per-shard [e_local, ep*C, d] view and derive their
+    # block specs from it via body_ctx.
+    out = bk.expert_ffn(w_local, buf, a, ctx=body_ctx)
 
     # all_to_all #2: return to token-major shards.
     out = out.reshape(e_local, ep, capacity, d)
@@ -92,7 +94,7 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
                              tiled=False)
     out = out.reshape(a.n_experts, capacity, d)
 
-    y = dsp.combine(out, p, dtype=x_local.dtype)
+    y = bk.combine(out, p, a, dtype=x_local.dtype)
     aux_loss = (losses.importance_loss(info.gates, a.w_importance)
                 + losses.load_loss(info.load, a.w_load))
     # Balance statistics are over the *global* batch: psum the raw vectors.
@@ -131,6 +133,14 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
             "a Manual-mode context"
         mesh = ctx.mesh
     assert mesh is not None, "moe_apply_ep needs a mesh (ctx or positional)"
+    bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
+    # Context for the shard_map body: every mesh axis is Manual on 0.4.x,
+    # so backend ops derive per-shard [E/ep, C, d] block specs from it.
+    # Only meaningful when the plan's expert axis is the ep axis we use.
+    body_ctx = (ctx or ctx_lib.MeshContext.for_mesh(mesh)).manual(
+        *mesh.axis_names)
+    if ep_axis not in body_ctx.rules.lookup("experts"):
+        body_ctx = None
     fsdp_axis = dp_axes[-1] if dp_axes else None
     token_spec = P(tuple(dp_axes) + (ep_axis,), None)
     w_specs = {
@@ -146,6 +156,6 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
         "fraction_dropped": P()}}
     fn = functools.partial(_local_moe, a=a, train=train, rng=rng,
                            ep_axis=ep_axis, fsdp_axis=fsdp_axis,
-                           ep=mesh.shape[ep_axis])
+                           ep=mesh.shape[ep_axis], bk=bk, body_ctx=body_ctx)
     return ctx_lib.shard_map(fn, mesh, (w_specs, token_spec),
                              (token_spec, aux_spec))(params, x)

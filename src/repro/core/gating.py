@@ -81,6 +81,7 @@ def noisy_topk_gating(
     train: bool,
     rng: jax.Array | None = None,
     valid: jax.Array | None = None,
+    topk_impl=None,
 ) -> GatingInfo:
     """Eqs. (3)-(5) + the Appendix-A load estimator.
 
@@ -94,6 +95,11 @@ def noisy_topk_gating(
 
     ``valid`` ([T] in {0,1}) masks padding rows (hierarchical-MoE buffers):
     masked rows contribute nothing to gates, combine weights, or load.
+
+    ``topk_impl`` swaps the KeepTopK+softmax for a fused kernel (the
+    backend registry's ``topk_impl``): ``(noisy, k, kk) -> (combine [T,k],
+    idx [T,k], raw top values [T,kk])`` — semantics identical to the
+    ``lax.top_k`` path (lowest-index tie-break, softmax over survivors).
     """
     xf = jnp.asarray(x, jnp.float32)
     clean = xf @ jnp.asarray(params["wg"], jnp.float32)            # [T, E]
@@ -110,9 +116,12 @@ def noisy_topk_gating(
 
     # KeepTopK + softmax over survivors (renormalized over k).
     kk = min(k + 1, n_experts)
-    top_vals, top_idx = _top_k(noisy, kk)                           # [T, k+1]
-    topk_vals, topk_idx = top_vals[..., :k], top_idx[..., :k]
-    combine = jax.nn.softmax(topk_vals, axis=-1)                    # [T, k]
+    if topk_impl is not None:
+        combine, topk_idx, top_vals = topk_impl(noisy, k, kk)       # fused
+    else:
+        top_vals, top_idx = _top_k(noisy, kk)                       # [T, k+1]
+        topk_idx = top_idx[..., :k]
+        combine = jax.nn.softmax(top_vals[..., :k], axis=-1)        # [T, k]
     if valid is not None:
         combine = combine * valid[:, None]
 

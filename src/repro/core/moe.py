@@ -8,6 +8,12 @@ Expert networks are the paper's one-hidden-layer ReLU FFNs by default;
 ``activation="swiglu"`` upgrades them to gated-SiLU experts (w1/w3/w2) for
 the modern architectures in the zoo (kimi-k2, arctic, jamba).
 
+The hot-path ops (top-k gating, dispatch/combine, expert FFN) route
+through the kernel backend registry (``repro.kernels.backend``,
+docs/kernels.md): ``kernel_backend="ref"`` is the jnp/XLA path,
+``"pallas"`` the fused trainable kernels.  Resolution is explicit — an
+unknown or broken backend raises instead of degrading silently.
+
 Distribution: logical axes are annotated so that under the ``dp_tp_ep`` plan
 experts shard over the *model* mesh axis (expert parallelism, §3.1) while
 their d_model dimension shards over *data* (FSDP — exactly one copy of every
@@ -25,6 +31,7 @@ import jax.numpy as jnp
 from repro.common.param import ParamDef
 from repro.core import dispatch as dsp
 from repro.core import gating, losses
+from repro.kernels import backend as backend_lib
 from repro.sharding import context as ctx_lib
 
 
@@ -40,8 +47,13 @@ class MoEArgs:
     eval_capacity_factor: float = 2.0
     w_importance: float = 0.1           # paper §C.1
     w_load: float = 0.1
-    dispatch_impl: str = "sort"         # sort | einsum
-    expert_impl: str = "einsum"         # einsum | pallas
+    dispatch_impl: str = "sort"         # sort | einsum (ref backend only)
+    expert_impl: str = "einsum"         # legacy spelling of kernel_backend
+    # Kernel backend for the hot path (see repro/kernels/backend.py):
+    # "ref" | "pallas"; None derives from the legacy expert_impl field.
+    # Resolution is explicit — an unknown or broken backend raises
+    # KernelBackendError instead of silently degrading to the slow path.
+    kernel_backend: str | None = None
     priority_dispatch: bool = False
     sigmoid_output: bool = False        # paper's LM passes MoE out thru sigmoid
     wide_dispatch: bool = True          # §3.1 combined-batch token resharding
@@ -69,31 +81,22 @@ def moe_defs(a: MoEArgs) -> dict:
     return defs
 
 
-def expert_ffn(params, x: jax.Array, a: MoEArgs) -> jax.Array:
-    """Apply every expert to its [E, C, d] buffer of dispatched tokens."""
-    if a.expert_impl == "pallas":
-        from repro.kernels import ops  # lazy: kernels are optional
-        return ops.expert_ffn(params, x, activation=a.activation)
-    w1 = params["w1"].astype(a.dtype)
-    w2 = params["w2"].astype(a.dtype)
-    h = jnp.einsum("ecd,edf->ecf", x, w1,
-                   preferred_element_type=jnp.float32)
-    if a.activation == "swiglu":
-        g = jnp.einsum("ecd,edf->ecf", x, params["w3"].astype(a.dtype),
-                       preferred_element_type=jnp.float32)
-        h = jax.nn.silu(h) * g
-    else:
-        h = jax.nn.relu(h)
-    h = h.astype(a.dtype)
-    return jnp.einsum("ecf,efd->ecd", h, w2,
-                      preferred_element_type=jnp.float32).astype(a.dtype)
+def expert_ffn(params, x: jax.Array, a: MoEArgs,
+               ctx: ctx_lib.MeshContext | None = None) -> jax.Array:
+    """Apply every expert to its [E, C, d] buffer of dispatched tokens.
+
+    Routed through the kernel backend registry — resolution is explicit
+    and raises on an unknown/broken backend (no silent degradation)."""
+    return backend_lib.resolve(a).expert_ffn(params, x, a, ctx=ctx)
 
 
 def run_gating(params, x: jax.Array, a: MoEArgs, *, train: bool,
-               rng: jax.Array | None) -> gating.GatingInfo:
+               rng: jax.Array | None,
+               topk_impl=None) -> gating.GatingInfo:
     if a.gating_mode == "noisy_topk":
         return gating.noisy_topk_gating(params["gate"], x, a.k,
-                                        train=train, rng=rng)
+                                        train=train, rng=rng,
+                                        topk_impl=topk_impl)
     if a.gating_mode == "batchwise":
         return gating.batchwise_gating(params["gate"], x, a.k)
     if a.gating_mode == "threshold":
@@ -114,7 +117,9 @@ def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
     ``ctx`` is the explicit sharding context; ``None`` resolves the
     contextvar (identity constraints off-mesh)."""
     t, d = x.shape
-    info = run_gating(params, x, a, train=train, rng=rng)
+    bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
+    info = run_gating(params, x, a, train=train, rng=rng,
+                      topk_impl=bk.topk_impl)
 
     cf = a.capacity_factor if train else a.eval_capacity_factor
     if a.gating_mode in ("batchwise", "threshold") and train:
@@ -128,19 +133,13 @@ def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
 
     token_axis = "tokens" if a.wide_dispatch else "batch"
     x = ctx_lib.with_constraint(x, (token_axis, "embed"), ctx)
-    if a.dispatch_impl == "einsum":
-        buf = dsp.dispatch_einsum(x, p)
-    else:
-        buf = dsp.dispatch(x, p)
+    buf = bk.dispatch(x, p, a, ctx=ctx)
     buf = ctx_lib.with_constraint(
         buf, ("experts", "expert_capacity", "embed"), ctx)
-    out = expert_ffn(params, buf, a)
+    out = bk.expert_ffn(params, buf, a, ctx=ctx)
     out = ctx_lib.with_constraint(
         out, ("experts", "expert_capacity", "embed"), ctx)
-    if a.dispatch_impl == "einsum":
-        y = dsp.combine_einsum(out, p, dtype=x.dtype)
-    else:
-        y = dsp.combine(out, p, dtype=x.dtype)
+    y = bk.combine(out, p, a, dtype=x.dtype, ctx=ctx)
     y = ctx_lib.with_constraint(y, (token_axis, "embed"), ctx)
     if a.sigmoid_output:
         y = jax.nn.sigmoid(y.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,257 @@
+"""Kernel backend registry: the one switch between the jnp reference path
+and the Pallas hot path.
+
+The MoE layer's three compute hot-spots — top-k gating (Eqs. 3/5), the
+dispatch/combine scatter, and the expert FFN grouped matmul (§3.2: the
+experts carry ~40% of total FLOPs) — each exist twice in this repo: a pure
+jnp/XLA reference and a fused Pallas kernel.  A :class:`KernelBackend`
+bundles one coherent set of the three; ``moe_apply``, the expert-parallel
+schedule, the trainer, and the microbenchmarks all go through
+:func:`resolve` instead of importing kernels ad hoc.
+
+Resolution is **explicit**: a backend that fails to import registers as
+broken and ``get()`` raises :class:`KernelBackendError` with the original
+import error — never a silent fall-back to the slow path (the lazy
+``from repro.kernels import ops`` in old ``core/moe.py`` would degrade
+with no signal; this registry is the fix).  Selection order:
+``MoEArgs.kernel_backend`` if set, else the legacy ``expert_impl`` field
+("pallas" -> pallas, anything else -> ref).
+
+MeshContext awareness
+---------------------
+Backends consume the explicit sharding context (ROADMAP open item 3):
+
+* :func:`shard_shape` maps a global logical shape to the per-shard view
+  under ``ctx`` — dims shrink by the mesh axes that are both assigned by
+  the plan *and* held Manual by an enclosing ``shard_map`` (that is what
+  the kernel actually sees inside the expert-parallel body);
+* :func:`block_plan` turns the per-shard ``[E_local, C, d] x d_ff`` FFN
+  shapes into the Pallas block spec (tile sizes + padded dims) via
+  ``gmm.plan_blocks`` — non-tile-aligned C/d_ff pad to tile boundaries
+  instead of asserting;
+* the pallas backend's ``expert_ffn`` validates its buffer against the
+  per-shard expectation and fails loudly on a mesh/shape mismatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch as dsp
+from repro.sharding import context as ctx_lib
+
+log = logging.getLogger(__name__)
+
+
+class KernelBackendError(RuntimeError):
+    """Unknown, broken, or mis-shaped kernel backend — never swallowed."""
+
+
+# ---------------------------------------------------------------------------
+# MeshContext -> per-shard shapes / block specs
+# ---------------------------------------------------------------------------
+
+def shard_shape(ctx: "ctx_lib.MeshContext | None", shape, logical_axes
+                ) -> tuple:
+    """Global logical shape -> the per-shard shape a kernel body sees.
+
+    Only mesh axes that the plan assigns to the logical dim *and* that the
+    context holds in Manual mode shrink the dim (an enclosing ``shard_map``
+    hands the body local blocks; Auto axes are GSPMD's and the kernel still
+    sees the global dim at trace time).  Off-mesh this is the identity.
+    """
+    if ctx is None or ctx.mesh is None or not ctx.manual_axes:
+        return tuple(shape)
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        denom = 1
+        for ax in ctx.rules.lookup(logical):
+            if ax not in ctx.mesh.shape or ax not in ctx.manual_axes:
+                continue
+            size = ctx.mesh.shape[ax]
+            if dim % (denom * size) == 0:
+                denom *= size
+        out.append(dim // denom)
+    return tuple(out)
+
+
+def block_plan(a, capacity: int, ctx: "ctx_lib.MeshContext | None" = None,
+               *, dtype=None):
+    """Per-shard Pallas block plan for the expert FFN's up-projection GMM:
+    ``[E_local, C_local, d] x [E_local, d, f_local]``.
+
+    Planning/introspection view of the same derivation the pallas
+    ``expert_ffn`` performs on its (per-shard) operands at trace time:
+    given the *global* MoE config + capacity, returns the ``gmm.BlockPlan``
+    a shard will run — padded dims show exactly how a non-tile-aligned
+    capacity / d_ff will be zero-padded on that shard.
+    """
+    from repro.kernels import gmm as gmm_lib
+    e, c, d = shard_shape(
+        ctx, (a.n_experts, capacity, a.d_model),
+        ("experts", "expert_capacity", "embed"))
+    (f,) = shard_shape(ctx, (a.d_ff,), ("expert_mlp",))
+    return gmm_lib.plan_blocks(e, c, d, f, dtype or a.dtype)
+
+
+def _check_local_buffer(x, a, ctx, backend_name: str):
+    """Validate a dispatched [E?, C?, d] buffer against the per-shard view."""
+    want_e, _, want_d = shard_shape(
+        ctx, (a.n_experts, 1, a.d_model),
+        ("experts", "expert_capacity", "embed"))
+    if x.ndim != 3 or x.shape[2] != want_d or x.shape[0] % want_e != 0:
+        raise KernelBackendError(
+            f"backend {backend_name!r}: buffer {x.shape} does not match the "
+            f"per-shard expert view [E_local={want_e}, C, d={want_d}] under "
+            f"ctx manual axes {sorted(ctx.manual_axes) if ctx else None}")
+
+
+# ---------------------------------------------------------------------------
+# the backend record + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """One coherent implementation set for the MoE hot path.
+
+    ``topk_impl`` is ``None`` for the jnp path (gating falls back to
+    ``lax.top_k``); otherwise ``(noisy_logits, k, kk) -> (combine [T,k],
+    idx [T,k], raw top values [T,kk])`` with the softmax fused.
+    """
+    name: str
+    expert_ffn: Callable     # (params, x, a, *, ctx=None) -> [E, C, d]
+    dispatch: Callable       # (x, plan, a, *, ctx=None)   -> [E, C, d]
+    combine: Callable        # (buf, plan, a, *, dtype=None, ctx=None) -> [T,d]
+    topk_impl: Callable | None = None
+
+
+_REGISTRY: dict[str, "KernelBackend | Exception"] = {}
+
+
+def register(backend: KernelBackend) -> None:
+    _REGISTRY[backend.name] = backend
+
+
+def register_broken(name: str, err: Exception) -> None:
+    """Record an import failure so ``get(name)`` re-raises it explicitly."""
+    _REGISTRY[name] = err
+
+
+def available() -> list[str]:
+    return sorted(n for n, b in _REGISTRY.items()
+                  if isinstance(b, KernelBackend))
+
+
+def get(name: str) -> KernelBackend:
+    entry = _REGISTRY.get(name)
+    if entry is None:
+        raise KernelBackendError(
+            f"unknown kernel backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}")
+    if isinstance(entry, Exception):
+        raise KernelBackendError(
+            f"kernel backend {name!r} failed to import: {entry!r}"
+        ) from entry
+    return entry
+
+
+def resolve(a) -> KernelBackend:
+    """Backend for a MoEArgs-like config (``kernel_backend`` field, else the
+    legacy ``expert_impl`` spelling).  Raises KernelBackendError — the MoE
+    layer never silently degrades to a different implementation."""
+    name = getattr(a, "kernel_backend", None)
+    if name is None:
+        name = "pallas" if getattr(a, "expert_impl", "einsum") == "pallas" \
+            else "ref"
+    backend = get(name)
+    log.debug("kernel backend resolved: %s", name)
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# "ref" — the pure jnp/XLA reference path
+# ---------------------------------------------------------------------------
+
+def _ref_expert_ffn(params, x, a, *, ctx=None):
+    w1 = params["w1"].astype(a.dtype)
+    w2 = params["w2"].astype(a.dtype)
+    h = jnp.einsum("ecd,edf->ecf", x, w1,
+                   preferred_element_type=jnp.float32)
+    if a.activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", x, params["w3"].astype(a.dtype),
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.relu(h)
+    h = h.astype(a.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w2,
+                      preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def _ref_dispatch(x, p, a, *, ctx=None):
+    if a.dispatch_impl == "einsum":
+        return dsp.dispatch_einsum(x, p)
+    return dsp.dispatch(x, p)
+
+
+def _ref_combine(buf, p, a, *, dtype=None, ctx=None):
+    if a.dispatch_impl == "einsum":
+        return dsp.combine_einsum(buf, p, dtype=dtype)
+    return dsp.combine(buf, p, dtype=dtype)
+
+
+register(KernelBackend(name="ref", expert_ffn=_ref_expert_ffn,
+                       dispatch=_ref_dispatch, combine=_ref_combine,
+                       topk_impl=None))
+
+
+# ---------------------------------------------------------------------------
+# "pallas" — the fused kernel path (registered broken if the import fails)
+# ---------------------------------------------------------------------------
+
+def _register_pallas() -> None:
+    try:
+        from repro.kernels import ops
+    except Exception as err:  # noqa: BLE001 — recorded, re-raised on use
+        register_broken("pallas", err)
+        log.warning("pallas kernel backend unavailable: %r", err)
+        return
+
+    def _pallas_expert_ffn(params, x, a, *, ctx=None):
+        if ctx is not None:
+            _check_local_buffer(x, a, ctx, "pallas")
+        # Per-shard block spec: the operands here ARE the per-shard view
+        # (a shard_map body hands local blocks — validated above, and the
+        # EP schedule all-gathers the FSDP-sharded d_ff before this call),
+        # so the plan derives from them and flows into both GMMs.
+        from repro.kernels import gmm as gmm_lib
+        e, c, d = x.shape
+        bp = gmm_lib.plan_blocks(e, c, d, params["w1"].shape[-1], x.dtype)
+        return ops.expert_ffn(params, x, activation=a.activation,
+                              bm=bp.bm, bn=bp.bn, bk=bp.bk)
+
+    def _pallas_dispatch(x, p, a, *, ctx=None):
+        # p.n_experts is authoritative: the EP schedule dispatches local
+        # tokens into *global*-E buffers before its all_to_all exchange.
+        return ops.dispatch(x, p.expert_index, p.position,
+                            n_experts=p.n_experts, capacity=p.capacity)
+
+    def _pallas_combine(buf, p, a, *, dtype=None, ctx=None):
+        return ops.combine(buf, p.weight, p.expert_index, p.position,
+                           out_dtype=dtype or buf.dtype)
+
+    def _pallas_topk(noisy, k, kk):
+        w, idx, vals = ops.topk_gating_full(noisy, k, extra=kk - k)
+        return w, idx[:, :k], vals
+
+    register(KernelBackend(name="pallas", expert_ffn=_pallas_expert_ffn,
+                           dispatch=_pallas_dispatch,
+                           combine=_pallas_combine,
+                           topk_impl=_pallas_topk))
+
+
+_register_pallas()

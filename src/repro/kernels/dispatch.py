@@ -1,0 +1,230 @@
+"""Fused dispatch/combine scatter kernels for the capacity-buffer hot path.
+
+``core/dispatch.py`` builds the [E, C, d] expert buffers either with an XLA
+scatter (``sort``) or GShard one-hot einsums (``einsum``, O(T·E·C) traffic).
+The TPU-native shape is a single kernel pass: the (expert, position) plan
+arrays ride in as *scalar-prefetch* operands (SMEM, available before the
+body runs — exactly what `PrefetchScalarGridSpec` exists for), the grid
+walks blocks of the T·k assignment list, and each step copies token rows
+into their slots with dynamic VMEM indexing.  The weighted combine fuses
+the gather and the ``sum_k w_k * E_k(x)`` reduction (Eq. 2) in one pass,
+accumulating at f32 — the [T, k, d] gathered intermediate of the jnp path
+never materializes.
+
+The destination buffer stays VMEM-resident across the whole grid (constant
+index map — a revolving output block).  VMEM budget: the full [E_local, C,
+d] buffer, e.g. 8 experts x 512 slots x 512 dims at f32 = 8 MiB, under the
+~16 MiB budget for every assigned shape; larger buffers need an E-blocked
+variant (future work, noted in docs/kernels.md).
+
+Dropped assignments (position >= capacity, including the zero-weight
+padding the plan assigns position==capacity) write nothing / combine at
+weight 0 — identical semantics to ``core/dispatch.py``.
+
+Both directions carry ``jax.custom_vjp`` so the Pallas path trains:
+
+* dispatch is a (duplicating) copy, so its cotangent is the *unit-weight*
+  combine of the output cotangent — the same fused kernel;
+* combine's buffer cotangent is the dispatch scatter of ``w_k * dy[t]``
+  (the kernel takes an optional per-assignment scale for exactly this),
+  and its weight cotangent is the per-assignment dot <dy[t], buf[e, p]>.
+
+On this CPU build host kernels run in interpret mode; ``interpret=False``
+is the TPU path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gmm import round_up as _round_up
+
+
+# ---------------------------------------------------------------------------
+# dispatch: [T, d] -> [E, C, d] scatter (optionally scaled per assignment)
+# ---------------------------------------------------------------------------
+
+def _dispatch_kernel(eidx_ref, pos_ref, scale_ref, x_ref, o_ref, *,
+                     k: int, capacity: int, block_a: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    base = pl.program_id(0) * block_a
+
+    def body(i, carry):
+        a = base + i
+        e = eidx_ref[a]
+        p = pos_ref[a]
+        kept = p < capacity                     # padding carries p==capacity
+        pc = jnp.where(kept, p, 0)
+        row = x_ref[a // k] * scale_ref[a]
+        cur = o_ref[e, pc]
+        o_ref[e, pc] = jnp.where(kept, row.astype(o_ref.dtype), cur)
+        return carry
+
+    jax.lax.fori_loop(0, block_a, body, 0)
+
+
+def _dispatch_raw(x, eidx, pos, scale, n_experts, capacity, block_a,
+                  interpret):
+    t, d = x.shape
+    k = eidx.shape[1]
+    n = t * k
+    block_a = min(block_a, n)
+    npad = _round_up(n, block_a)
+    ef = jnp.zeros((npad,), jnp.int32).at[:n].set(eidx.reshape(-1))
+    # Padded assignments get position == capacity => dropped in-kernel.
+    pf = jnp.full((npad,), capacity, jnp.int32).at[:n].set(pos.reshape(-1))
+    sf = jnp.zeros((npad,), jnp.float32).at[:n].set(scale.reshape(-1))
+    kernel = functools.partial(_dispatch_kernel, k=k, capacity=capacity,
+                               block_a=block_a)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(npad // block_a,),
+            in_specs=[pl.BlockSpec((t, d), lambda i, *_: (0, 0))],
+            out_specs=pl.BlockSpec((n_experts, capacity, d),
+                                   lambda i, *_: (0, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_experts, capacity, d), x.dtype),
+        interpret=interpret,
+    )(ef, pf, sf, x)
+
+
+# ---------------------------------------------------------------------------
+# combine: [E, C, d] -> [T, d] weighted gather-reduce
+# ---------------------------------------------------------------------------
+
+def _combine_kernel(eidx_ref, pos_ref, w_ref, buf_ref, o_ref, *,
+                    k: int, capacity: int, block_t: int):
+    base = pl.program_id(0) * block_t
+    d = o_ref.shape[-1]
+
+    def body(i, carry):
+        t = base + i
+        acc = jnp.zeros((d,), jnp.float32)
+        for j in range(k):                      # k <= 8: static unroll
+            a = t * k + j
+            e = eidx_ref[a]
+            p = pos_ref[a]
+            pc = jnp.where(p < capacity, p, 0)
+            w = jnp.where(p < capacity, w_ref[a], 0.0)
+            acc = acc + w * buf_ref[e, pc].astype(jnp.float32)
+        o_ref[i] = acc.astype(o_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, block_t, body, 0)
+
+
+def _combine_raw(buf, w, eidx, pos, out_dtype, block_t, interpret):
+    n_experts, capacity, d = buf.shape
+    t, k = eidx.shape
+    n = t * k
+    block_t = min(block_t, t)
+    tpad = _round_up(t, block_t)
+    npad = tpad * k
+    ef = jnp.zeros((npad,), jnp.int32).at[:n].set(eidx.reshape(-1))
+    pf = jnp.full((npad,), capacity, jnp.int32).at[:n].set(pos.reshape(-1))
+    wf = jnp.zeros((npad,), jnp.float32).at[:n].set(
+        w.astype(jnp.float32).reshape(-1))
+    kernel = functools.partial(_combine_kernel, k=k, capacity=capacity,
+                               block_t=block_t)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(tpad // block_t,),
+            in_specs=[pl.BlockSpec((n_experts, capacity, d),
+                                   lambda i, *_: (0, 0, 0))],
+            out_specs=pl.BlockSpec((block_t, d), lambda i, *_: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((tpad, d), out_dtype),
+        interpret=interpret,
+    )(ef, pf, wf, buf)
+    return out[:t] if tpad != t else out
+
+
+# ---------------------------------------------------------------------------
+# differentiable public ops
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret):
+    ones = jnp.ones((x.shape[0], eidx.shape[1]), jnp.float32)
+    return _dispatch_raw(x, eidx, pos, ones, n_experts, capacity, block_a,
+                         interpret)
+
+
+def _dispatch_fwd(x, eidx, pos, n_experts, capacity, block_a, interpret):
+    return (_dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret),
+            (eidx, pos))
+
+
+def _dispatch_bwd(n_experts, capacity, block_a, interpret, res, g):
+    eidx, pos = res
+    # The scatter duplicates x[t] into its kept slots, so dx is the
+    # unit-weight combine of the cotangent buffer (same fused kernel).
+    unit = jnp.ones(eidx.shape, jnp.float32)
+    dx = _combine_raw(g, unit, eidx, pos, g.dtype, 128, interpret)
+    return dx, None, None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _combine(buf, w, eidx, pos, out_dtype, block_t, interpret):
+    return _combine_raw(buf, w, eidx, pos, out_dtype, block_t, interpret)
+
+
+def _combine_fwd(buf, w, eidx, pos, out_dtype, block_t, interpret):
+    return (_combine_raw(buf, w, eidx, pos, out_dtype, block_t, interpret),
+            (buf, w, eidx, pos))
+
+
+def _combine_bwd(out_dtype, block_t, interpret, res, g):
+    buf, w, eidx, pos = res
+    n_experts, capacity, _ = buf.shape
+    gf = g.astype(jnp.float32)
+    # d_buf[e_k, p_k] += w_k * dy[t]: the scaled dispatch scatter.
+    dbuf = _dispatch_raw(gf, eidx, pos, w.astype(jnp.float32), n_experts,
+                         capacity, 256, interpret).astype(buf.dtype)
+    # d_w[t, k] = <dy[t], buf[e_k, p_k]> for kept slots (XLA gather: the
+    # [T, k, d] intermediate only exists in backward).
+    kept = pos < capacity
+    gathered = buf[eidx, jnp.clip(pos, 0, capacity - 1)]       # [T, k, d]
+    dw = jnp.sum(gf[:, None, :] * gathered.astype(jnp.float32), axis=-1)
+    dw = jnp.where(kept, dw, 0.0).astype(w.dtype)
+    return dbuf, dw, None, None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "capacity",
+                                             "block_a", "interpret"))
+def dispatch(x: jax.Array, eidx: jax.Array, pos: jax.Array, *,
+             n_experts: int, capacity: int, block_a: int = 256,
+             interpret: bool = True) -> jax.Array:
+    """[T, d] -> [E, C, d]: fused capacity-buffer build.
+
+    ``eidx``/``pos`` are the [T, k] DispatchPlan arrays; assignments with
+    ``pos >= capacity`` are dropped, matching ``core.dispatch.dispatch``.
+    """
+    return _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "block_t",
+                                             "interpret"))
+def combine(buf: jax.Array, w: jax.Array, eidx: jax.Array, pos: jax.Array,
+            *, out_dtype=None, block_t: int = 128,
+            interpret: bool = True) -> jax.Array:
+    """[E, C, d] -> [T, d]: fused weighted gather, y = sum_k w_k E_{e_k}(x)."""
+    out_dtype = out_dtype or buf.dtype
+    return _combine(buf, w, eidx, pos, out_dtype, block_t, interpret)

@@ -16,17 +16,107 @@ schedule.  VMEM working set per step (bm=bn=bk=128): x tile 32 KiB +
 w tile 32 KiB + f32 acc 64 KiB ~= 128 KiB, far under the ~16 MiB budget;
 larger bn/bk amortize grid overhead until the d_ff dimension is consumed.
 
+Non-tile-aligned shapes are zero-padded up to the block plan (see
+:func:`plan_blocks`) and the output trimmed — zero rows/columns are inert
+through the matmul and the fused activations (relu(0) == silu(0) == 0), so
+padding never changes the visible result.
+
+Training: :func:`gmm` carries a ``jax.custom_vjp`` so the Pallas path is
+differentiable end-to-end.  Both cotangents are themselves grouped matmuls
+and reuse the same kernel —
+
+    dx = gmm(dyʹ, wᵀ)          [E,C,N] x [E,N,K] -> [E,C,K]
+    dw = gmm(xᵀ, dyʹ)          [E,K,C] x [E,C,N] -> [E,K,N]
+
+where dyʹ folds the activation derivative in: the pre-activation z is
+rematerialized with one extra no-activation GMM (the Appendix-D
+"recompute expert activations on the backward pass" policy) rather than
+saved, keeping forward residuals at (x, w).
+
 On this CPU build host kernels run in interpret mode (the kernel body
 executes as Python/jnp); ``interpret=False`` is the TPU path.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of m >= x (shared by the kernel modules)."""
+    return -(-x // m) * m
+
+
+def _sublane(dtype) -> int:
+    """Minimum TPU sublane tile for a dtype (second-to-last dim)."""
+    return 16 if dtype == jnp.bfloat16 else 8
+
+
+class BlockPlan(NamedTuple):
+    """A per-shard block spec for one grouped matmul: padded operand shapes
+    plus the (bm, bn, bk) tile walk.  ``padded == shape`` iff the local
+    dims were already tile-aligned."""
+    e: int
+    c: int          # padded row dim (capacity)
+    k: int          # padded contraction dim
+    n: int          # padded output dim
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def grid(self) -> tuple[int, int, int, int]:
+        return (self.e, self.c // self.bm, self.n // self.bn,
+                self.k // self.bk)
+
+
+def plan_blocks(e: int, c: int, k: int, n: int, dtype=jnp.float32, *,
+                bm: int = 128, bn: int = 128, bk: int = 128) -> BlockPlan:
+    """Derive the block plan for a (possibly non-tile-aligned) local shape.
+
+    Blocks are clamped to the (tile-rounded) dims so small problems don't
+    pad all the way to 128, and dims are padded up to a whole number of
+    blocks instead of asserting divisibility.
+    """
+    sub = _sublane(dtype)
+    bm = min(bm, round_up(c, sub))
+    bn = min(bn, round_up(n, 128))
+    bk = min(bk, round_up(k, 128))
+    return BlockPlan(e=e, c=round_up(c, bm), k=round_up(k, bk),
+                     n=round_up(n, bn), bm=bm, bn=bn, bk=bk)
+
+
+def _pad3(x: jax.Array, d1: int, d2: int) -> jax.Array:
+    """Zero-pad the trailing two dims of [E, a, b] up to (d1, d2)."""
+    e, a, b = x.shape
+    if a == d1 and b == d2:
+        return x
+    return jnp.pad(x, ((0, 0), (0, d1 - a), (0, d2 - b)))
+
+
+def _act(out: jax.Array, activation: str) -> jax.Array:
+    if activation == "relu":
+        return jnp.maximum(out, 0.0)
+    if activation == "silu":
+        return out * (1.0 / (1.0 + jnp.exp(-out)))
+    assert activation == "none", activation
+    return out
+
+
+def _act_grad(z: jax.Array, activation: str) -> jax.Array:
+    """d act(z) / dz at f32."""
+    if activation == "relu":
+        return (z > 0.0).astype(jnp.float32)
+    if activation == "silu":
+        s = jax.nn.sigmoid(z)
+        return s * (1.0 + z * (1.0 - s))
+    assert activation == "none", activation
+    return jnp.ones_like(z)
 
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, activation: str):
@@ -40,12 +130,60 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, activation: str):
 
     @pl.when(pl.program_id(3) == n_k - 1)
     def _epilogue():
-        out = acc_ref[...]
-        if activation == "relu":
-            out = jnp.maximum(out, 0.0)
-        elif activation == "silu":
-            out = out * (1.0 / (1.0 + jnp.exp(-out)))
-        o_ref[0] = out.astype(o_ref.dtype)
+        o_ref[0] = _act(acc_ref[...], activation).astype(o_ref.dtype)
+
+
+def _gmm_raw(x: jax.Array, w: jax.Array, activation: str,
+             bm: int, bn: int, bk: int, interpret: bool) -> jax.Array:
+    """Pad -> pallas_call -> trim.  No autodiff rule (see ``gmm``)."""
+    e, c, k = x.shape
+    _, _, n = w.shape
+    bp = plan_blocks(e, c, k, n, x.dtype, bm=bm, bn=bn, bk=bk)
+    xp = _pad3(x, bp.c, bp.k)
+    wp = _pad3(w, bp.k, bp.n)
+    n_k = bp.k // bp.bk
+    kernel = functools.partial(_gmm_kernel, n_k=n_k, activation=activation)
+    out = pl.pallas_call(
+        kernel,
+        grid=bp.grid,
+        in_specs=[
+            pl.BlockSpec((1, bp.bm, bp.bk), lambda e, m, n_, k_: (e, m, k_)),
+            pl.BlockSpec((1, bp.bk, bp.bn), lambda e, m, n_, k_: (e, k_, n_)),
+        ],
+        out_specs=pl.BlockSpec((1, bp.bm, bp.bn),
+                               lambda e, m, n_, k_: (e, m, n_)),
+        out_shape=jax.ShapeDtypeStruct((e, bp.c, bp.n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bp.bm, bp.bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    if (bp.c, bp.n) != (c, n):
+        out = out[:, :c, :n]
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _gmm(x, w, activation, bm, bn, bk, interpret):
+    return _gmm_raw(x, w, activation, bm, bn, bk, interpret)
+
+
+def _gmm_fwd(x, w, activation, bm, bn, bk, interpret):
+    return _gmm_raw(x, w, activation, bm, bn, bk, interpret), (x, w)
+
+
+def _gmm_bwd(activation, bm, bn, bk, interpret, res, g):
+    x, w = res
+    if activation != "none":
+        # Rematerialize the pre-activation z (one extra GMM) and fold the
+        # activation derivative into the incoming cotangent.
+        z = _gmm_raw(x, w, "none", bm, bn, bk, interpret)
+        g = (g.astype(jnp.float32)
+             * _act_grad(z.astype(jnp.float32), activation)).astype(g.dtype)
+    dx = _gmm_raw(g, jnp.swapaxes(w, 1, 2), "none", bm, bn, bk, interpret)
+    dw = _gmm_raw(jnp.swapaxes(x, 1, 2), g, "none", bm, bn, bk, interpret)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_gmm.defvjp(_gmm_fwd, _gmm_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk",
@@ -53,24 +191,9 @@ def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, activation: str):
 def gmm(x: jax.Array, w: jax.Array, *, activation: str = "none",
         bm: int = 128, bn: int = 128, bk: int = 128,
         interpret: bool = True) -> jax.Array:
-    """[E, C, K] x [E, K, N] -> [E, C, N] with optional fused activation."""
-    e, c, k = x.shape
-    _, _, n = w.shape
-    bm, bn, bk = min(bm, c), min(bn, n), min(bk, k)
-    assert c % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w.shape,
-                                                         (bm, bn, bk))
-    n_k = k // bk
-    grid = (e, c // bm, n // bn, n_k)
-    kernel = functools.partial(_gmm_kernel, n_k=n_k, activation=activation)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda e, m, n_, k_: (e, m, k_)),
-            pl.BlockSpec((1, bk, bn), lambda e, m, n_, k_: (e, k_, n_)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda e, m, n_, k_: (e, m, n_)),
-        out_shape=jax.ShapeDtypeStruct((e, c, n), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(x, w)
+    """[E, C, K] x [E, K, N] -> [E, C, N] with optional fused activation.
+
+    Differentiable (custom VJP); non-tile-aligned C/K/N are zero-padded to
+    the :func:`plan_blocks` boundaries and the output trimmed.
+    """
+    return _gmm(x, w, activation, bm, bn, bk, interpret)

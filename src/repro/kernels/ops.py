@@ -3,12 +3,20 @@
 On TPU these dispatch the compiled kernels; on the CPU build host they run
 in interpret mode (kernel bodies executed with jnp), which is how the
 allclose tests against ``ref.py`` validate them.
+
+All ops are differentiable (each kernel carries a ``jax.custom_vjp``).
+The MeshContext-aware layer lives one level up in
+``repro.kernels.backend``: the registry's pallas backend derives the
+*per-shard* ``[E_local, C, d]`` view from a ``MeshContext`` and validates
+buffers against it before handing the local shapes to these wrappers
+(whose kernels pad non-tile-aligned dims internally).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as dispatch_lib
 from repro.kernels import gmm as gmm_lib
 from repro.kernels import topk_gating as topk_lib
 
@@ -20,23 +28,50 @@ def gmm(x, w, *, activation: str = "none", bm=128, bn=128, bk=128):
                        interpret=_INTERPRET)
 
 
-def expert_ffn(params, x, *, activation: str = "relu"):
+def expert_ffn(params, x, *, activation: str = "relu",
+               bm=128, bn=128, bk=128):
     """Two fused GMMs: up-projection (+act) then down-projection.
 
     x: [E, C, d]; params carries w1 [E,d,f], w2 [E,f,d], (w3 for swiglu).
+    Differentiable end-to-end via the GMM custom VJP.  ``bm/bn/bk`` cap
+    the tile walk (the backend layer passes a per-shard block plan here;
+    each GMM still clamps/pads to its own operand dims).
     """
     dt = x.dtype
     w1 = params["w1"].astype(dt)
     w2 = params["w2"].astype(dt)
+    blocks = dict(bm=bm, bn=bn, bk=bk)
     if activation == "swiglu":
-        h = gmm(x, w1, activation="silu")
-        g = gmm(x, params["w3"].astype(dt), activation="none")
+        h = gmm(x, w1, activation="silu", **blocks)
+        g = gmm(x, params["w3"].astype(dt), activation="none", **blocks)
         h = (h.astype(jnp.float32) * g.astype(jnp.float32)).astype(dt)
     else:
-        h = gmm(x, w1, activation="relu")
-    return gmm(h, w2, activation="none")
+        h = gmm(x, w1, activation="relu", **blocks)
+    return gmm(h, w2, activation="none", **blocks)
 
 
 def topk_gating(logits, k: int, block_t: int = 256):
     return topk_lib.topk_gating(logits, k, block_t=block_t,
+                                interpret=_INTERPRET)
+
+
+def topk_gating_full(logits, k: int, extra: int = 0, block_t: int = 256):
+    """(weights [T,k], indices [T,k+extra], raw top values [T,k+extra]).
+
+    The ``extra`` raw values feed the Appendix-A load estimator (the noisy
+    gating path needs the (k+1)-th noisy logit as threshold).
+    """
+    return topk_lib.topk_gating_full(logits, k, extra, block_t=block_t,
+                                     interpret=_INTERPRET)
+
+
+def dispatch(x, eidx, pos, *, n_experts: int, capacity: int):
+    """Fused capacity-buffer build, [T, d] -> [E, C, d]."""
+    return dispatch_lib.dispatch(x, eidx, pos, n_experts=n_experts,
+                                 capacity=capacity, interpret=_INTERPRET)
+
+
+def combine(buf, w, eidx, pos, *, out_dtype=None):
+    """Fused weighted combine, [E, C, d] -> [T, d]."""
+    return dispatch_lib.combine(buf, w, eidx, pos, out_dtype=out_dtype,
                                 interpret=_INTERPRET)

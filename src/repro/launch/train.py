@@ -59,12 +59,18 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=50)
     ap.add_argument("--reduce", action="store_true",
                     help="shrink the config for a dev host")
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=["ref", "pallas"],
+                    help="MoE kernel backend override (docs/kernels.md); "
+                         "default: the arch config's choice")
     ap.add_argument("--workdir", default="/tmp/repro_train")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduced(cfg)
+    if args.kernel_backend is not None:
+        cfg = cfg.replace(kernel_backend=args.kernel_backend)
     params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
     print(f"[train] {cfg.name}: {pm.param_count(params)/1e6:.1f}M params "
           f"on {len(jax.devices())} device(s)")
@@ -87,7 +93,8 @@ def main():
                              microbatches=args.microbatches,
                              checkpoint_every=args.checkpoint_every,
                              log_every=10),
-        data_iter=DataIterator(dc), workdir=args.workdir)
+        data_iter=DataIterator(dc), workdir=args.workdir,
+        kernel_backend=cfg.kernel_backend)
     final = trainer.run()
     print(f"[train] done: {final}")
 

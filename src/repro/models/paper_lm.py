@@ -44,6 +44,8 @@ class PaperLMConfig:
     w_importance: float = 0.1       # §C.1
     w_load: float = 0.1
     dropout: float = 0.1
+    # MoE kernel backend ("ref" | "pallas"); None = ref.  See docs/kernels.md.
+    kernel_backend: str | None = None
     dtype: Any = jnp.float32
 
 
@@ -54,7 +56,8 @@ def _moe_args(cfg: PaperLMConfig) -> moe_lib.MoEArgs:
         gating_mode=cfg.gating_mode, capacity_factor=cfg.capacity_factor,
         eval_capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
-        sigmoid_output=True, dtype=cfg.dtype)
+        sigmoid_output=True, kernel_backend=cfg.kernel_backend,
+        dtype=cfg.dtype)
 
 
 def _hmoe_args(cfg: PaperLMConfig) -> hmoe_lib.HMoEArgs:

@@ -31,6 +31,7 @@ def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
         eval_capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
         dispatch_impl=cfg.dispatch_impl, expert_impl=cfg.expert_impl,
+        kernel_backend=cfg.kernel_backend,
         wide_dispatch=cfg.moe_wide_dispatch, dtype=cfg.param_dtype)
 
 

@@ -106,11 +106,23 @@ class Trainer:
     def __init__(self, *, loss_fn, params, oc: opt_lib.OptConfig,
                  loop: TrainLoopConfig, data_iter, workdir: str,
                  jit: bool = True, crash_at_step: int | None = None,
-                 ctx: ctx_lib.MeshContext | None = None):
+                 ctx: ctx_lib.MeshContext | None = None,
+                 kernel_backend: str | None = None):
         # The sharding context is entered around step tracing so loss
         # closures that consult current_ctx() (instead of binding ctx
         # explicitly) still resolve the right mesh/plan.
         self.ctx = ctx
+        # Fail-fast *validation* of the kernel backend the model config is
+        # expected to use: raises KernelBackendError at construction
+        # instead of mid-trace at the first jitted step.  Selection itself
+        # lives in the loss closure's MoEArgs/ModelConfig — this argument
+        # does not override it.
+        self.kernel_backend = kernel_backend
+        if kernel_backend is not None:
+            from repro.kernels import backend as backend_lib
+            backend_lib.get(kernel_backend)
+            print(f"[trainer] kernel backend {kernel_backend!r} validated "
+                  "(active backend is set by the model config)")
         self.loop = loop
         self.data_iter = data_iter
         self.workdir = workdir
