@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test-tier1 test-slow test-all test-kernels bench-micro
+.PHONY: test-tier1 test-slow test-all test-kernels test-serve \
+	bench-micro bench-serve
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
@@ -15,6 +16,11 @@ test-tier1:
 test-kernels:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_kernels.py \
 		tests/test_kernel_grads.py tests/test_kernel_backend.py
+
+# Continuous-batching serving suite (part of tier-1; this target runs
+# just it: scheduler/slot-pool semantics, sequential parity, reshard).
+test-serve:
+	$(PY) -m pytest -q tests/test_serve.py
 
 # The slow tier (multi-device subprocess equivalence, training curves).
 test-slow:
@@ -27,3 +33,8 @@ test-all:
 # Host-side microbenchmarks -> BENCH_micro.json (perf trajectory).
 bench-micro:
 	$(PY) benchmarks/run.py --only micro --json BENCH_micro.json
+
+# Serving throughput/latency: static-batch vs continuous batching at
+# several prompt/output mixes -> BENCH_serve.json.
+bench-serve:
+	$(PY) benchmarks/serve_bench.py

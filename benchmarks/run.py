@@ -10,6 +10,8 @@ accumulates across PRs.  Mapping to the paper:
   table6_balance    -> Table 6: w_importance/w_load ablation (CV + max/mean)
   fig2_capacity     -> Figure 2-left: perplexity vs capacity, matched ops
   microbench        -> host-side hot-path microbenchmarks
+  serve_bench       -> static-batch vs continuous-batching serving
+                       throughput/latency (beyond-paper; docs/serving.md)
   (Figure 3 is Figure 2 at 100B words; Table 5 needs the 12-pair corpus —
    both noted in EXPERIMENTS.md §Skips.  TPU-side numbers live in
    EXPERIMENTS.md §Roofline, produced by repro.launch.dryrun.)
@@ -26,7 +28,7 @@ import json
 import platform
 import time
 
-SUITES = ("table7", "table2", "micro", "table6", "fig2")
+SUITES = ("table7", "table2", "micro", "table6", "fig2", "serve")
 
 
 def main() -> None:
@@ -45,7 +47,7 @@ def main() -> None:
                      else "BENCH_full.json")
 
     print("name,us_per_call,derived")
-    from benchmarks import (common, fig2_capacity, microbench,
+    from benchmarks import (common, fig2_capacity, microbench, serve_bench,
                             table2_mt_ops, table6_balance, table7_ops)
     runners = {
         "table7": table7_ops.run,
@@ -53,6 +55,7 @@ def main() -> None:
         "micro": microbench.run,
         "table6": table6_balance.run,
         "fig2": fig2_capacity.run,
+        "serve": serve_bench.run,
     }
     picked = [args.only] if args.only else list(SUITES)
     t0 = time.time()

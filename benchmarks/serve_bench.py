@@ -1,0 +1,128 @@
+"""Serving benchmark: static-batch vs continuous batching throughput.
+
+Replays the same staggered, mixed-length request trace through the same
+``ServeEngine`` twice — once with the batch-drain (``static``) admission
+policy, once with continuous batching — at several prompt/output-length
+mixes, and emits throughput/latency rows:
+
+  serve_static_<mix>      us = wall time of the run;   derived tok_s/steps
+  serve_continuous_<mix>  ...                          + util + speedup
+
+Static batching decodes into dead slots until every sequence in a batch
+drains before admitting the next one; continuous batching recycles a slot
+the step its sequence finishes, so the same trace completes in fewer
+decode steps (each step costs the same jitted call) — that step ratio is
+the scheduling win, the wall-clock tok/s ratio is the measured one.
+
+Standalone (``make bench-serve``) writes BENCH_serve.json; via
+``benchmarks/run.py --only serve`` the rows join the common JSON dump.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ROWS, emit
+
+# (name, prompt-length cycle, new-token cycle): short-uniform traffic, a
+# long-prompt mix, and a skewed output mix (the worst case for drains).
+# Prompt lengths stay multiples (or divisors) of the reduced q_block=16.
+MIXES = (
+    ("short", (8, 8, 8, 8), (8, 8, 8, 8)),
+    ("mixed", (8, 32, 16, 8), (4, 16, 8, 12)),
+    ("skewed", (16, 8, 8, 8), (24, 4, 4, 4)),
+)
+N_REQUESTS = 16
+N_SLOTS = 4
+ARRIVALS_PER_STEP = 2   # two requests become visible per engine step
+
+
+def _requests(rng: np.random.RandomState, vocab: int, plens, nlens):
+    return [
+        (rng.randint(1, vocab, (plens[i % len(plens)],)).astype(np.int32),
+         nlens[i % len(nlens)], i // ARRIVALS_PER_STEP)
+        for i in range(N_REQUESTS)
+    ]
+
+
+def _run_trace(engine, trace) -> dict:
+    engine.reset()
+    reqs = [engine.submit(p, m, arrival=a) for p, m, a in trace]
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    lat = [r.finished_step - r.arrival for r in reqs]
+    return {
+        "wall_s": dt,
+        "tokens": engine.stats["generated_tokens"],
+        "tok_s": engine.stats["generated_tokens"] / dt,
+        "decode_steps": engine.stats["decode_steps"],
+        "util": engine.slot_utilization,
+        "mean_latency_steps": float(np.mean(lat)),
+        "p95_latency_steps": float(np.percentile(lat, 95)),
+    }
+
+
+def run() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.common import param as pm
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("kimi-k2-1t-a32b").replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        vocab_size=256, n_experts=8, moe_k=2, moe_d_ff=64,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        q_block=16, kv_block=16, capacity_factor=2.0)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    engines = {
+        policy: ServeEngine(params, cfg, ServeConfig(
+            max_len=64, n_slots=N_SLOTS, policy=policy))
+        for policy in ("static", "continuous")
+    }
+
+    rng = np.random.RandomState(0)
+    for name, plens, nlens in MIXES:
+        trace = _requests(rng, cfg.vocab_size, plens, nlens)
+        # Warm the jit caches (one compile per distinct prompt length),
+        # then measure.
+        for policy in ("static", "continuous"):
+            _run_trace(engines[policy], trace)
+        res = {policy: _run_trace(engines[policy], trace)
+               for policy in ("static", "continuous")}
+        s, c = res["static"], res["continuous"]
+        emit(f"serve_static_{name}", s["wall_s"] * 1e6,
+             f"tok_s={s['tok_s']:.1f};steps={s['decode_steps']};"
+             f"util={s['util']:.2f};lat_mean={s['mean_latency_steps']:.1f}")
+        emit(f"serve_continuous_{name}", c["wall_s"] * 1e6,
+             f"tok_s={c['tok_s']:.1f};steps={c['decode_steps']};"
+             f"util={c['util']:.2f};lat_mean={c['mean_latency_steps']:.1f};"
+             f"speedup={c['tok_s'] / s['tok_s']:.2f}x")
+
+
+if __name__ == "__main__":
+    import json
+    import platform
+    import sys
+
+    sys.path.insert(0, ".")
+    start = len(ROWS)
+    print("name,us_per_call,derived")
+    run()
+    import jax
+    payload = {
+        "suites": ["serve"],
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "rows": ROWS[start:],
+    }
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] wrote {len(ROWS) - start} rows to BENCH_serve.json")

@@ -1,6 +1,7 @@
-"""Batched serving example: prefill a batch of prompts through a MoE
-transformer (kimi-k2 family, reduced) and decode new tokens with the slot
-engine.
+"""Continuous-batching serving example: staggered, mixed-length requests
+through a reduced MoE transformer (kimi-k2 family).  Slots are recycled
+the moment a request finishes — more requests than slots complete in one
+run — and per-step MoE telemetry shows the serving-time expert load.
 
 Run: PYTHONPATH=src python examples/serve_lm.py
 """
@@ -23,10 +24,23 @@ print(f"serving a reduced {cfg.name} ({pm.param_count(params)/1e6:.1f}M "
       f"params, {cfg.n_experts} experts top-{cfg.moe_k})")
 
 engine = ServeEngine(params, cfg,
-                     ServeConfig(max_len=128, temperature=0.7, seed=0))
-prompts = np.random.RandomState(0).randint(1, cfg.vocab_size, (8, 24))
-out = engine.generate(prompts, max_new_tokens=16)
-for i in range(4):
-    print(f"  req{i}: prompt[-4:]={prompts[i, -4:].tolist()} "
-          f"-> generated {out[i].tolist()}")
-print(f"batch of {out.shape[0]} served, {out.shape[1]} tokens each")
+                     ServeConfig(max_len=128, temperature=0.7, seed=0,
+                                 n_slots=3))
+rng = np.random.RandomState(0)
+reqs = [engine.submit(rng.randint(1, cfg.vocab_size, (plen,)),
+                      max_new_tokens=new, arrival=arrival)
+        for plen, new, arrival in
+        [(24, 16, 0), (8, 8, 0), (16, 12, 1), (24, 4, 3), (8, 16, 4),
+         (16, 8, 6)]]
+engine.run()
+
+for r in reqs[:4]:
+    print(f"  req{r.rid}: prompt[{r.prompt_len}] arrived@{r.arrival} "
+          f"-> {len(r.tokens)} tokens ({r.done_reason}): {r.tokens}")
+print(f"{len(reqs)} requests over {engine.sc.n_slots} slots in "
+      f"{engine.stats['decode_steps']} decode steps "
+      f"(slot utilization {engine.slot_utilization:.0%}, "
+      f"{engine.stats['prefills']} prefills)")
+load = np.sum([t["expert_load"] for t in engine.telemetry], axis=0)
+print(f"decode-time expert load: {load.astype(int).tolist()}, "
+      f"capacity overflow: {engine.stats['overflow_total']:.0f}")

@@ -78,6 +78,10 @@ class ModelConfig:
     # Kernel backend for the MoE hot path ("ref" | "pallas"); None derives
     # from expert_impl.  See src/repro/kernels/backend.py and docs/kernels.md.
     kernel_backend: str | None = None
+    # VMEM budget (bytes) for the fused dispatch/combine kernel; None =
+    # kernels.dispatch.DEFAULT_VMEM_LIMIT.  Past it the pallas backend
+    # falls back to the ref scatter instead of silently OOMing.
+    dispatch_vmem_limit: int | None = None
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

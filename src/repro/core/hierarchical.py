@@ -18,6 +18,12 @@ axis (one group of secondary experts per model-shard), the exact analogue of
 Implementation: primary capacity-dispatch puts tokens into [a, Cp, d]
 buffers, then the secondary MoE runs vmapped over groups with padding-slot
 masking so padded (zero) tokens influence neither gates nor load statistics.
+
+Both levels route their hot-path ops (dispatch/combine scatter, expert
+FFN) through the kernel backend registry (``repro.kernels.backend``) —
+``kernel_backend="pallas"`` runs the fused kernels (vmapped over groups at
+the secondary level), ``"ref"`` the jnp path; resolution is explicit and
+raises on an unknown/broken backend, same as the flat MoE layer.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 from repro.common.param import ParamDef
 from repro.core import dispatch as dsp
 from repro.core import gating, losses
+from repro.kernels import backend as backend_lib
 from repro.sharding import context as ctx_lib
 
 
@@ -45,6 +52,11 @@ class HMoEArgs:
     capacity_factor: float = 2.0
     w_importance: float = 0.1
     w_load: float = 0.1
+    dispatch_impl: str = "sort"         # ref backend: sort | einsum
+    # Kernel backend (repro/kernels/backend.py): "ref" | "pallas"; None
+    # resolves to "ref" (explicit resolution — unknown/broken raises).
+    kernel_backend: str | None = None
+    dispatch_vmem_limit: int | None = None
     dtype: Any = jnp.bfloat16
 
     @property
@@ -88,31 +100,30 @@ def _secondary_one_group(gate_params, w1, w2, w3, x_grp, valid, a: HMoEArgs,
     """Run one group's secondary MoE on its [Cp, d] buffer.
 
     ``valid`` masks the padding slots left by primary capacity dispatch.
-    Returns (y [Cp, d], importance_j [b], load_j [b], n_valid scalar).
+    Returns (y [Cp, d], importance_j [b], load_j [b], n_valid scalar,
+    telemetry dict of [b] counters).  Dispatch/combine and the expert FFN
+    go through the kernel backend registry (vmapped over groups).
     """
+    from repro.core import moe as moe_lib
+
+    bk = backend_lib.resolve(a)
     info = gating.noisy_topk_gating(gate_params, x_grp, a.k_secondary,
                                     train=train, rng=rng, valid=valid)
     cap = dsp.capacity_for(x_grp.shape[0], a.n_experts_per_group,
                            a.k_secondary, a.capacity_factor)
     p = dsp.plan(info.expert_index, info.combine_weights,
                  a.n_experts_per_group, cap)
-    buf = dsp.dispatch(x_grp, p)
-    h = jnp.einsum("ecd,edf->ecf", buf, w1.astype(buf.dtype),
-                   preferred_element_type=jnp.float32)
+    buf = bk.dispatch(x_grp, p, a)
+    params = {"w1": w1, "w2": w2}
     if a.activation == "swiglu":
-        g = jnp.einsum("ecd,edf->ecf", buf, w3.astype(buf.dtype),
-                       preferred_element_type=jnp.float32)
-        h = jax.nn.silu(h) * g
-    else:
-        h = jax.nn.relu(h)
-    out = jnp.einsum("ecf,efd->ecd", h.astype(buf.dtype),
-                     w2.astype(buf.dtype),
-                     preferred_element_type=jnp.float32).astype(buf.dtype)
-    y = dsp.combine(out, p, dtype=x_grp.dtype)
+        params["w3"] = w3
+    out = bk.expert_ffn(params, buf, a)
+    y = bk.combine(out, p, a, dtype=x_grp.dtype)
     importance_j = losses.importance(info.gates)                # [b]
     load_j = info.load                                          # [b], masked
     n_valid = jnp.sum(valid)
-    return y, importance_j, load_j, n_valid
+    return y, importance_j, load_j, n_valid, \
+        moe_lib.gating_telemetry(info, p)
 
 
 def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
@@ -123,12 +134,13 @@ def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
     t, d = x.shape
     rng_p, rng_s = (jax.random.split(rng) if rng is not None
                     else (None, None))
+    bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
     prim = gating.noisy_topk_gating(params["gate_primary"], x, a.k_primary,
                                     train=train, rng=rng_p)
     cap_p = dsp.capacity_for(t, a.n_groups, a.k_primary, a.capacity_factor)
     plan_p = dsp.plan(prim.expert_index, prim.combine_weights, a.n_groups,
                       cap_p)
-    buf = dsp.dispatch(x, plan_p)                      # [a, Cp, d]
+    buf = bk.dispatch(x, plan_p, a, ctx=ctx)           # [a, Cp, d]
     valid = dsp.dispatch(jnp.ones((t, 1), x.dtype), plan_p)[..., 0]
     valid = (valid > 0).astype(jnp.float32)            # [a, Cp]
     buf = ctx_lib.with_constraint(buf, ("expert_groups", None, "embed"),
@@ -140,12 +152,12 @@ def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
     sec = jax.vmap(
         lambda gp, gn, w1, w2, w3g, xg, vg, rg: _secondary_one_group(
             {"wg": gp, "wnoise": gn}, w1, w2, w3g, xg, vg, a, train, rg))
-    y_grp, imp_sec, load_sec, n_valid = sec(
+    y_grp, imp_sec, load_sec, n_valid, telem_sec = sec(
         params["gate_secondary"]["wg"], params["gate_secondary"]["wnoise"],
         params["w1"], params["w2"], w3, buf, valid,
         rngs if rngs is not None else jnp.zeros((a.n_groups, 2), jnp.uint32))
 
-    y = dsp.combine(y_grp, plan_p, dtype=x.dtype)       # primary combine
+    y = bk.combine(y_grp, plan_p, a, dtype=x.dtype, ctx=ctx)  # primary
 
     # Eq. (13): Importance_H = Gp_i * G_i_j summed over tokens.  The
     # secondary importance was computed on dispatched tokens whose combine
@@ -167,4 +179,9 @@ def hmoe_apply(params, x: jax.Array, a: HMoEArgs, *, train: bool = True,
             jnp.mean(load_h), 1e-9),
         "fraction_dropped": plan_p.fraction_dropped,
     }
-    return y, {"aux_loss": aux_loss, "metrics": metrics}
+    # Serving telemetry over the flattened (group, expert) grid; primary-
+    # level drops are visible via metrics["fraction_dropped"].
+    telemetry = {"expert_load": telem_sec["expert_load"].reshape(-1),
+                 "overflow": telem_sec["overflow"].reshape(-1)}
+    return y, {"aux_loss": aux_loss, "metrics": metrics,
+               "telemetry": telemetry}

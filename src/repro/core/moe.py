@@ -54,6 +54,11 @@ class MoEArgs:
     # Resolution is explicit — an unknown or broken backend raises
     # KernelBackendError instead of silently degrading to the slow path.
     kernel_backend: str | None = None
+    # VMEM budget (bytes) for the fused dispatch/combine kernel's resident
+    # [E, C, d] buffer; None uses kernels.dispatch.DEFAULT_VMEM_LIMIT.
+    # Past the limit the pallas backend falls back to the ref scatter
+    # instead of silently OOMing (the E-blocked variant is future work).
+    dispatch_vmem_limit: int | None = None
     priority_dispatch: bool = False
     sigmoid_output: bool = False        # paper's LM passes MoE out thru sigmoid
     wide_dispatch: bool = True          # §3.1 combined-batch token resharding
@@ -151,4 +156,24 @@ def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
             params["gate"], params["thresholds"], x, a.k)
     metrics = losses.balance_metrics(info.gates, info.load)
     metrics["fraction_dropped"] = p.fraction_dropped
-    return y, {"aux_loss": aux_loss, "metrics": metrics}
+    return y, {"aux_loss": aux_loss, "metrics": metrics,
+               "telemetry": gating_telemetry(info, p)}
+
+
+def gating_telemetry(info: gating.GatingInfo, p: dsp.DispatchPlan) -> dict:
+    """Per-expert serving counters from one gating/dispatch decision.
+
+    ``expert_load``: hard assignment counts (tokens routed per expert),
+    ``overflow``: assignments dropped by capacity truncation per expert.
+    Consumed by the serving telemetry path (stack_decode accumulates these
+    across MoE layers); the train path drops them in ``_add_aux``.
+    """
+    assigned = (info.combine_weights > 0.0).reshape(-1)
+    kept = (p.position < p.capacity).reshape(-1)
+    flat_e = info.expert_index.reshape(-1)
+    zero = jnp.zeros((p.n_experts,), jnp.float32)
+    return {
+        "expert_load": zero.at[flat_e].add(assigned.astype(jnp.float32)),
+        "overflow": zero.at[flat_e].add(
+            (assigned & ~kept).astype(jnp.float32)),
+    }

@@ -215,11 +215,29 @@ register(KernelBackend(name="ref", expert_ffn=_ref_expert_ffn,
 
 def _register_pallas() -> None:
     try:
+        from repro.kernels import dispatch as dispatch_lib
         from repro.kernels import ops
     except Exception as err:  # noqa: BLE001 — recorded, re-raised on use
         register_broken("pallas", err)
         log.warning("pallas kernel backend unavailable: %r", err)
         return
+
+    def _vmem_ok(a, n_experts, capacity, d, dtype, n_tokens, what) -> bool:
+        """VMEM-footprint guard: the fused kernels keep the whole [E, C, d]
+        buffer resident; past the (configurable) budget fall back to the
+        ref scatter instead of silently OOMing.  The E-blocked variant
+        stays future work (ROADMAP)."""
+        limit = getattr(a, "dispatch_vmem_limit", None)
+        limit = dispatch_lib.DEFAULT_VMEM_LIMIT if limit is None else limit
+        need = dispatch_lib.vmem_bytes(n_experts, capacity, d, dtype,
+                                       n_tokens)
+        if need <= limit:
+            return True
+        log.warning(
+            "pallas %s buffer [E=%d, C=%d, d=%d] needs ~%d B VMEM > "
+            "limit %d B; falling back to the ref path for this call",
+            what, n_experts, capacity, d, need, limit)
+        return False
 
     def _pallas_expert_ffn(params, x, a, *, ctx=None):
         if ctx is not None:
@@ -237,12 +255,26 @@ def _register_pallas() -> None:
     def _pallas_dispatch(x, p, a, *, ctx=None):
         # p.n_experts is authoritative: the EP schedule dispatches local
         # tokens into *global*-E buffers before its all_to_all exchange.
+        if not _vmem_ok(a, p.n_experts, p.capacity, x.shape[-1], x.dtype,
+                        x.shape[0], "dispatch"):
+            return dsp.dispatch(x, p)
         return ops.dispatch(x, p.expert_index, p.position,
-                            n_experts=p.n_experts, capacity=p.capacity)
+                            n_experts=p.n_experts, capacity=p.capacity,
+                            vmem_limit=getattr(a, "dispatch_vmem_limit",
+                                               None))
 
     def _pallas_combine(buf, p, a, *, dtype=None, ctx=None):
+        # Same estimate as ops.combine's own guard (the [block_t, d]
+        # output block rides along with the resident buffer) so borderline
+        # shapes fall back here instead of raising one layer down.
+        n_tok = min(128, p.expert_index.shape[0])
+        if not _vmem_ok(a, buf.shape[0], buf.shape[1], buf.shape[2],
+                        buf.dtype, n_tok, "combine"):
+            return dsp.combine(buf, p, dtype=dtype)
         return ops.combine(buf, p.weight, p.expert_index, p.position,
-                           out_dtype=dtype or buf.dtype)
+                           out_dtype=dtype or buf.dtype,
+                           vmem_limit=getattr(a, "dispatch_vmem_limit",
+                                              None))
 
     def _pallas_topk(noisy, k, kk):
         w, idx, vals = ops.topk_gating_full(noisy, k, extra=kk - k)

@@ -43,6 +43,43 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.gmm import round_up as _round_up
 
+# VMEM budget for the revolving [E, C, d] output (dispatch) / input
+# (combine) buffer that stays resident across the whole grid, plus the
+# token block.  Shapes past the limit need the E-blocked variant (future
+# work, docs/kernels.md); until then the guard fails loudly — or, via the
+# backend registry, falls back to the ref scatter — instead of silently
+# OOMing the core.
+DEFAULT_VMEM_LIMIT = 16 * 1024 * 1024
+
+
+class DispatchVMEMError(RuntimeError):
+    """Fused dispatch/combine buffer exceeds the configured VMEM budget."""
+
+
+def vmem_bytes(n_experts: int, capacity: int, d: int, dtype,
+               n_tokens: int = 0) -> int:
+    """Estimated resident VMEM for one fused dispatch/combine call: the
+    [E, C, d] buffer (constant index map — never rotated out) plus the
+    [T, d] token block."""
+    item = jnp.dtype(dtype).itemsize
+    return int((n_experts * capacity * d + n_tokens * d) * item)
+
+
+def check_vmem(n_experts: int, capacity: int, d: int, dtype, *,
+               n_tokens: int = 0, limit: int | None = None) -> int:
+    """Raise DispatchVMEMError when the estimate exceeds ``limit``
+    (None -> DEFAULT_VMEM_LIMIT).  Returns the estimate."""
+    limit = DEFAULT_VMEM_LIMIT if limit is None else limit
+    need = vmem_bytes(n_experts, capacity, d, dtype, n_tokens)
+    if need > limit:
+        raise DispatchVMEMError(
+            f"fused dispatch/combine buffer [E={n_experts}, C={capacity}, "
+            f"d={d}] ({jnp.dtype(dtype).name}) needs ~{need} B VMEM "
+            f"> limit {limit} B; shrink capacity/shard the experts, raise "
+            f"the limit, or use the ref backend (E-blocked kernel is "
+            f"future work)")
+    return need
+
 
 # ---------------------------------------------------------------------------
 # dispatch: [T, d] -> [E, C, d] scatter (optionally scaled per assignment)
@@ -207,24 +244,44 @@ def _combine_bwd(out_dtype, block_t, interpret, res, g):
 _combine.defvjp(_combine_fwd, _combine_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("n_experts", "capacity",
-                                             "block_a", "interpret"))
 def dispatch(x: jax.Array, eidx: jax.Array, pos: jax.Array, *,
              n_experts: int, capacity: int, block_a: int = 256,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = True,
+             vmem_limit: int | None = None) -> jax.Array:
     """[T, d] -> [E, C, d]: fused capacity-buffer build.
 
     ``eidx``/``pos`` are the [T, k] DispatchPlan arrays; assignments with
     ``pos >= capacity`` are dropped, matching ``core.dispatch.dispatch``.
+    Raises :class:`DispatchVMEMError` when the resident buffer estimate
+    exceeds ``vmem_limit`` (None -> DEFAULT_VMEM_LIMIT).
     """
+    check_vmem(n_experts, capacity, x.shape[-1], x.dtype,
+               n_tokens=x.shape[0], limit=vmem_limit)
+    return _dispatch_jit(x, eidx, pos, n_experts, capacity, block_a,
+                         interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_experts", "capacity",
+                                             "block_a", "interpret"))
+def _dispatch_jit(x, eidx, pos, n_experts, capacity, block_a, interpret):
     return _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret)
+
+
+def combine(buf: jax.Array, w: jax.Array, eidx: jax.Array, pos: jax.Array,
+            *, out_dtype=None, block_t: int = 128,
+            interpret: bool = True,
+            vmem_limit: int | None = None) -> jax.Array:
+    """[E, C, d] -> [T, d]: fused weighted gather, y = sum_k w_k E_{e_k}(x).
+
+    Raises :class:`DispatchVMEMError` when the resident buffer estimate
+    exceeds ``vmem_limit`` (None -> DEFAULT_VMEM_LIMIT)."""
+    out_dtype = out_dtype or buf.dtype
+    check_vmem(buf.shape[0], buf.shape[1], buf.shape[2], buf.dtype,
+               n_tokens=min(block_t, eidx.shape[0]), limit=vmem_limit)
+    return _combine_jit(buf, w, eidx, pos, out_dtype, block_t, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "block_t",
                                              "interpret"))
-def combine(buf: jax.Array, w: jax.Array, eidx: jax.Array, pos: jax.Array,
-            *, out_dtype=None, block_t: int = 128,
-            interpret: bool = True) -> jax.Array:
-    """[E, C, d] -> [T, d]: fused weighted gather, y = sum_k w_k E_{e_k}(x)."""
-    out_dtype = out_dtype or buf.dtype
+def _combine_jit(buf, w, eidx, pos, out_dtype, block_t, interpret):
     return _combine(buf, w, eidx, pos, out_dtype, block_t, interpret)

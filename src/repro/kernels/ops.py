@@ -65,13 +65,19 @@ def topk_gating_full(logits, k: int, extra: int = 0, block_t: int = 256):
                                      interpret=_INTERPRET)
 
 
-def dispatch(x, eidx, pos, *, n_experts: int, capacity: int):
-    """Fused capacity-buffer build, [T, d] -> [E, C, d]."""
+def dispatch(x, eidx, pos, *, n_experts: int, capacity: int,
+             vmem_limit: int | None = None):
+    """Fused capacity-buffer build, [T, d] -> [E, C, d].  Raises
+    ``DispatchVMEMError`` past the VMEM budget (see kernels/dispatch.py)."""
     return dispatch_lib.dispatch(x, eidx, pos, n_experts=n_experts,
-                                 capacity=capacity, interpret=_INTERPRET)
+                                 capacity=capacity, interpret=_INTERPRET,
+                                 vmem_limit=vmem_limit)
 
 
-def combine(buf, w, eidx, pos, *, out_dtype=None):
-    """Fused weighted combine, [E, C, d] -> [T, d]."""
+def combine(buf, w, eidx, pos, *, out_dtype=None,
+            vmem_limit: int | None = None):
+    """Fused weighted combine, [E, C, d] -> [T, d].  Raises
+    ``DispatchVMEMError`` past the VMEM budget (see kernels/dispatch.py)."""
     return dispatch_lib.combine(buf, w, eidx, pos, out_dtype=out_dtype,
-                                interpret=_INTERPRET)
+                                interpret=_INTERPRET,
+                                vmem_limit=vmem_limit)

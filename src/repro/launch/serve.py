@@ -1,8 +1,12 @@
-"""Serving launcher: load (or init) a model and serve batched requests.
+"""Serving launcher: load (or init) a model and serve a request trace
+through the continuous-batching engine.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduce \
       --requests 8 --new-tokens 16
+  # staggered mixed-length trace, static-batch baseline for comparison:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduce \
+      --requests 16 --slots 4 --stagger 2 --policy static
 """
 from __future__ import annotations
 
@@ -32,6 +36,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="slot-pool size (default: min(requests, 8))")
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="admit one request every N engine steps")
+    ap.add_argument("--policy", choices=("continuous", "static"),
+                    default="continuous",
+                    help="static = batch-drain baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -50,18 +61,30 @@ def main():
         ctx = ctx_lib.MeshContext.for_mesh(make_host_mesh(), "decode_std")
     else:
         ctx = ctx_lib.MeshContext.null(plan="decode_std")
+    n_slots = args.slots or min(args.requests, 8)
     engine = ServeEngine(params, cfg, ServeConfig(
         max_len=args.prompt_len + args.new_tokens + 1,
-        temperature=args.temperature), ctx=ctx)
-    prompts = np.random.RandomState(0).randint(
-        1, cfg.vocab_size, (args.requests, args.prompt_len))
+        temperature=args.temperature, n_slots=n_slots,
+        policy=args.policy), ctx=ctx)
+    rng = np.random.RandomState(0)
+    reqs = [engine.submit(rng.randint(1, cfg.vocab_size, (args.prompt_len,)),
+                          args.new_tokens, arrival=i * args.stagger)
+            for i in range(args.requests)]
     t0 = time.perf_counter()
-    out = engine.generate(prompts, max_new_tokens=args.new_tokens)
+    engine.run()
     dt = time.perf_counter() - t0
-    total = out.size
-    print(f"[serve] {args.requests} requests x {out.shape[1]} tokens in "
-          f"{dt:.2f}s ({total/dt:.1f} tok/s on this host)")
-    print(f"[serve] sample: {out[0][:10].tolist()}")
+    total = engine.stats["generated_tokens"]
+    print(f"[serve] {args.requests} requests x {args.new_tokens} tokens in "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s on this host, "
+          f"policy={args.policy}, slots={n_slots}, "
+          f"steps={engine.stats['decode_steps']}, "
+          f"util={engine.slot_utilization:.2f})")
+    if engine.telemetry:
+        load = np.sum([t["expert_load"] for t in engine.telemetry], axis=0)
+        over = engine.stats["overflow_total"]
+        print(f"[serve] expert load (decode): {load.astype(int).tolist()} "
+              f"(capacity overflow: {over:.0f})")
+    print(f"[serve] sample: {reqs[0].tokens[:10]}")
 
 
 if __name__ == "__main__":

@@ -423,22 +423,26 @@ def init_cache_defs(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
 
 def decode_attention(params, x, cache, cur_index, *, rope_theta: float,
                      qk_norm: bool, window: int = 0) -> tuple[jax.Array, dict]:
-    """One-token decode. x: [B, 1, d]; cur_index: scalar position.
+    """One-token decode. x: [B, 1, d]; cur_index: scalar position, or a
+    [B] vector of *per-sequence* positions (continuous-batching slots of
+    mixed age each decode at their own offset).
 
     Returns (y [B,1,d], updated cache).  For windowed layers the cache is a
     ring buffer written at ``cur_index % window``.
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), cur_index, jnp.int32)
+    cur = jnp.broadcast_to(
+        jnp.asarray(cur_index, jnp.int32).reshape(-1), (b,))       # [B]
+    positions = cur[:, None]
     q, k_new, v_new = _qkv(params, x, positions, rope_theta=rope_theta,
                            qk_norm=qk_norm)
     length = cache["k"].shape[1]
-    slot = cur_index % length if window > 0 else cur_index
+    slot = cur % length if window > 0 else cur                     # [B]
     # One-hot blend instead of dynamic_update_slice: a DUS at a traced
     # offset on the sharded cache-sequence axis makes GSPMD all-gather the
     # whole cache per layer; the blend is shard-local (each shard compares
     # its own slot ids) and costs one select over data already streamed.
-    hit = (jnp.arange(length) == slot)[None, :, None, None]
+    hit = (jnp.arange(length)[None, :] == slot[:, None])[..., None, None]
     k = jnp.where(hit, k_new.astype(cache["k"].dtype), cache["k"])
     v = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
 
@@ -448,17 +452,18 @@ def decode_attention(params, x, cache, cur_index, *, rope_theta: float,
     qr = q.reshape(b, 1, kv_heads, g, hd)
     s = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
                    preferred_element_type=jnp.float32) / (hd ** 0.5)
-    slots = jnp.arange(length)
+    slots = jnp.arange(length)[None, :]                            # [1, S]
     if window > 0:
         # Ring buffer: after writing at `slot`, slot s holds absolute
         # position p = cur - slot + s - W*(s > slot), the latest p <= cur
         # with p % W == s.  All such p lie in (cur - W, cur]; a slot is
         # valid iff it has ever been written, i.e. p >= 0.
-        abs_pos = cur_index - slot + slots - length * (slots > slot)
-        valid = abs_pos >= 0
+        abs_pos = (cur[:, None] - slot[:, None] + slots
+                   - length * (slots > slot[:, None]))
+        valid = abs_pos >= 0                                       # [B, S]
     else:
-        valid = slots <= cur_index
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        valid = slots <= cur[:, None]                              # [B, S]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32)

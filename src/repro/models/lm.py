@@ -126,12 +126,18 @@ def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
 
 
 def lm_decode(params, tokens, cache, cur_index, cfg: ModelConfig,
-              ctx: ctx_lib.MeshContext | None = None):
+              ctx: ctx_lib.MeshContext | None = None, *,
+              return_telemetry: bool = False):
     """One decode step. tokens: [B] int32; cur_index: scalar int32 position
-    of the *new* token.  Returns (logits [B, V], new_cache)."""
+    of the *new* token, or a [B] vector of per-sequence positions (serving
+    slots of mixed age).  Returns (logits [B, V], new_cache), plus — with
+    ``return_telemetry`` — the per-expert MoE load/overflow counters summed
+    over layers (None for models without MoE)."""
     x = layers.embed(params["embed"], tokens[:, None], cfg.compute_dtype)
-    x, new_cache = transformer.stack_decode(params["blocks"], x, cfg, cache,
-                                            cur_index, ctx=ctx)
+    x, new_cache, telem = transformer.stack_decode(params["blocks"], x, cfg,
+                                                   cache, cur_index, ctx=ctx)
     x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     logits = logits_fn(params, x, cfg, ctx)[:, 0, :]
+    if return_telemetry:
+        return logits, new_cache, telem
     return logits, new_cache

@@ -32,6 +32,7 @@ def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
         w_importance=cfg.w_importance, w_load=cfg.w_load,
         dispatch_impl=cfg.dispatch_impl, expert_impl=cfg.expert_impl,
         kernel_backend=cfg.kernel_backend,
+        dispatch_vmem_limit=cfg.dispatch_vmem_limit,
         wide_dispatch=cfg.moe_wide_dispatch, dtype=cfg.param_dtype)
 
 
@@ -42,7 +43,8 @@ def _hmoe_args(cfg: ModelConfig) -> hmoe.HMoEArgs:
         k_secondary=cfg.moe_k, d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
         activation=cfg.activation, capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
-        dtype=cfg.param_dtype)
+        kernel_backend=cfg.kernel_backend, dispatch_impl=cfg.dispatch_impl,
+        dispatch_vmem_limit=cfg.dispatch_vmem_limit, dtype=cfg.param_dtype)
 
 
 def block_defs(cfg: ModelConfig, kind: LayerKind) -> dict:
@@ -83,6 +85,43 @@ def _add_aux(acc, aux):
     return {"aux_loss": acc["aux_loss"] + aux["aux_loss"],
             "metrics": {k: acc["metrics"][k] + aux["metrics"][k]
                         for k in _ZERO_METRICS},
+            "n_moe": acc["n_moe"] + 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Serving telemetry: per-expert load / overflow counters summed over the
+# MoE layers of one decode (or prefill) step.  The train path drops the
+# per-layer "telemetry" entry in _add_aux; the decode stack accumulates it
+# so serving skew is observable per step.
+# ---------------------------------------------------------------------------
+
+def telemetry_width(cfg: ModelConfig) -> int:
+    """Length of the per-expert telemetry vectors (0 = model has no MoE)."""
+    if not any(k.ffn in ("moe", "moe+dense") for k in layer_kinds(cfg)):
+        return 0
+    if cfg.moe_hierarchical:
+        a, b = cfg.moe_hierarchical
+        return a * b
+    return cfg.n_experts
+
+
+def _telemetry_zero(cfg: ModelConfig):
+    n = telemetry_width(cfg)
+    if n == 0:
+        return None
+    return {"expert_load": jnp.zeros((n,), jnp.float32),
+            "overflow": jnp.zeros((n,), jnp.float32),
+            "n_moe": jnp.zeros((), jnp.float32)}
+
+
+def _add_telemetry(acc, aux):
+    if acc is None or aux is None:
+        return acc
+    t = aux.get("telemetry")
+    if t is None:
+        return acc
+    return {"expert_load": acc["expert_load"] + t["expert_load"],
+            "overflow": acc["overflow"] + t["overflow"],
             "n_moe": acc["n_moe"] + 1.0}
 
 
@@ -150,7 +189,9 @@ def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
 def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
                  cur_index,
                  ctx: ctx_lib.MeshContext | None = None):
-    """One-token decode block. Returns (x, new_cache)."""
+    """One-token decode block. ``cur_index`` is a scalar or a [B] vector of
+    per-sequence positions (mixed-age serving slots).
+    Returns (x, new_cache, aux)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
         window = cfg.sliding_window if kind.mixer == "attn_local" else 0
@@ -161,8 +202,8 @@ def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
         y, new_cache = ssm.mamba_decode(params["mamba"], h, cache,
                                         d_state=cfg.ssm_d_state)
     x = x + y
-    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx)
-    return x, new_cache
+    x, aux = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx)
+    return x, new_cache, aux
 
 
 # ---------------------------------------------------------------------------
@@ -286,27 +327,34 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
 
 def stack_decode(params, x, cfg: ModelConfig, cache, cur_index,
                  ctx: ctx_lib.MeshContext | None = None):
-    """One-token decode through all layers. Returns (x, new_cache)."""
+    """One-token decode through all layers.  ``cur_index`` is a scalar or a
+    [B] vector of per-sequence positions.  Returns (x, new_cache,
+    telemetry) where telemetry is the summed per-expert load/overflow
+    counters over MoE layers (None if the model has none)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
     new_cache: dict = {}
+    telem = _telemetry_zero(cfg)
 
-    def period_body(x, xs):
+    def period_body(carry, xs):
+        x, telem = carry
         period_params, period_cache = xs
         out_cache = {}
         for p in range(cfg.period):
-            x, out_cache[f"pos{p}"] = block_decode(
+            x, out_cache[f"pos{p}"], aux = block_decode(
                 period_params[f"pos{p}"], x, kinds[p], cfg,
                 period_cache[f"pos{p}"], cur_index, ctx=ctx)
-        return x, out_cache
+            telem = _add_telemetry(telem, aux)
+        return (x, telem), out_cache
 
     if full:
-        x, new_cache["periods"] = jax.lax.scan(
-            period_body, x, (params["periods"], cache["periods"]))
+        (x, telem), new_cache["periods"] = jax.lax.scan(
+            period_body, (x, telem), (params["periods"], cache["periods"]))
     if rem:
         new_cache["tail"] = {}
         for p in range(rem):
-            x, new_cache["tail"][f"pos{p}"] = block_decode(
+            x, new_cache["tail"][f"pos{p}"], aux = block_decode(
                 params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
                 cache["tail"][f"pos{p}"], cur_index, ctx=ctx)
-    return x, new_cache
+            telem = _add_telemetry(telem, aux)
+    return x, new_cache, telem

@@ -1,12 +1,40 @@
-"""Batched serving engine: prefill + decode with a fixed slot pool.
+"""Continuous-batching serving engine.
 
-Continuous-batching-lite: the engine owns ``batch_size`` sequence slots.
-``generate`` prefills a batch of prompts (right-aligned padding-free — all
-prompts padded to the same length with position masking via the causal
-mask) and then runs jitted single-token decode steps, sampling with
-temperature / greedy.  Finished sequences (EOS or length) keep decoding
-into dead slots until the batch drains — the standard static-batch serving
-pattern; slot recycling across batches is the Trainer-side loop's job.
+The engine owns ``n_slots`` sequence slots and runs a step loop of
+
+    schedule -> (prefill newly admitted requests) -> fused decode step
+             -> sample -> retire finished slots
+
+Requests are admitted and retired *independently* (continuous batching):
+the moment a sequence finishes — EOS or length budget, checked uniformly
+for every sampled token including the last — its slot returns to the pool
+and the next queued request prefills into it.  No batch-drain stalls: a
+mixed-length batch never decodes into dead slots while stragglers finish
+(the static-batch baseline that does is kept as ``policy="static"`` for
+the serve benchmark).
+
+Device-side structure per step: at most a few batch-1 prefills (one jit
+per distinct prompt length) plus exactly one fused decode call over the
+whole pool with *per-slot* positions (``lm_decode`` takes a [n_slots]
+position vector — slots of mixed age each attend at their own offset).
+
+Plans: prefill runs under ``prefill_tp`` (dispatch capacity sharded over
+data), decode under ``decode_std`` (weights stay sharded, KV sequence over
+model).  The handoff is an explicit ``MeshContext.reshard`` — device_put
+of the prefilled page onto the decode plan — before the page is inserted
+into the slot pool (ROADMAP: the prefill→decode boundary now reshards).
+
+Telemetry: every decode step records the summed per-expert load and
+capacity-overflow counters from the gating path (``engine.telemetry``),
+so serving-time expert skew is observable per step.
+
+Batching-invariance caveat: all pool slots (active *and* dead) share the
+MoE capacity buffers of one fused decode, so greedy outputs are
+bit-identical to sequential generation only while no decode-time
+capacity overflow occurs (ample ``capacity_factor`` relative to
+``n_slots``).  Under routing skew past capacity, which sequences share a
+step determines what drops — exactly the events the per-step
+``overflow`` telemetry counts, so the regime is observable.
 """
 from __future__ import annotations
 
@@ -18,16 +46,22 @@ import numpy as np
 
 from repro.common import param as pm
 from repro.configs.base import ModelConfig
-from repro.models import lm, transformer
+from repro.models import lm
+from repro.serve.kv_cache import SlotKVCache
+from repro.serve.scheduler import Request, RequestQueue, Scheduler
 from repro.sharding import context as ctx_lib
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_len: int = 256
+    max_len: int = 256           # slot page length (prompt + new tokens)
     temperature: float = 0.0     # 0 => greedy
     eos_id: int = -1             # -1 => never stop early
     seed: int = 0
+    n_slots: int = 8             # slot-pool size == decode batch width
+    policy: str = "continuous"   # "continuous" | "static" (drain baseline)
+    prefill_plan: str = "prefill_tp"
+    decode_plan: str = "decode_std"
 
 
 class ServeEngine:
@@ -36,44 +70,186 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.sc = sc
-        self.ctx = ctx or ctx_lib.MeshContext.null(
-            plan="decode_std")
+        self.ctx = ctx or ctx_lib.MeshContext.null(plan=sc.decode_plan)
+        on_mesh = self.ctx.mesh is not None
+        self.decode_ctx = (self.ctx.with_plan(sc.decode_plan) if on_mesh
+                           else self.ctx)
+        self.prefill_ctx = (self.ctx.with_plan(sc.prefill_plan) if on_mesh
+                            else self.ctx)
         self._prefill = jax.jit(
-            lambda p, b, c: lm.lm_prefill(
-                p, b, c, cfg, ctx=self.ctx.with_plan("prefill_tp")
-                if self.ctx.mesh is not None else self.ctx))
+            lambda p, b, c: lm.lm_prefill(p, b, c, cfg,
+                                          ctx=self.prefill_ctx))
         self._decode = jax.jit(
-            lambda p, t, c, i: lm.lm_decode(p, t, c, i, cfg, ctx=self.ctx))
+            lambda p, t, c, i: lm.lm_decode(p, t, c, i, cfg,
+                                            ctx=self.decode_ctx,
+                                            return_telemetry=True))
+        self._argmax = jax.jit(lambda l: jnp.argmax(l, axis=-1)
+                               .astype(jnp.int32))
+        if sc.temperature > 0.0:
+            self._categorical = jax.jit(jax.vmap(
+                lambda key, l: jax.random.categorical(
+                    key, l / sc.temperature).astype(jnp.int32)))
+        self.reset()
 
-    def _sample(self, logits: jax.Array, rng) -> jax.Array:
+    # -- lifecycle --------------------------------------------------------
+    def reset(self) -> None:
+        """Fresh queue/pool/stats/request ids (so a replayed trace samples
+        the same per-request streams); compiled step functions are
+        retained."""
+        self._rid = 0
+        self.kv = SlotKVCache(self.cfg, self.sc.n_slots, self.sc.max_len,
+                              ctx=self.decode_ctx)
+        # One immutable blank page, reused by every prefill (jax arrays
+        # are never mutated in place, so sharing is safe).
+        self._blank_page = pm.materialize(self.kv.seq_defs,
+                                          jax.random.PRNGKey(0))
+        self.queue = RequestQueue()
+        self.sched = Scheduler(self.sc.n_slots, policy=self.sc.policy)
+        self.step_count = 0
+        self.telemetry: list[dict] = []
+        self.stats = {"prefills": 0, "decode_steps": 0, "reshards": 0,
+                      "generated_tokens": 0, "slot_steps_active": 0,
+                      "slot_steps_total": 0, "overflow_total": 0.0}
+
+    def submit(self, prompt, max_new_tokens: int, arrival: int = 0
+               ) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] + max_new_tokens > self.sc.max_len:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_len {self.sc.max_len}")
+        req = Request(rid=self._rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, arrival=arrival)
+        self._rid += 1
+        self.queue.push(req)
+        return req
+
+    # -- sampling ---------------------------------------------------------
+    def _req_key(self, req: Request):
+        """Per-request stream: deterministic regardless of which batch the
+        request happens to share a decode step with."""
+        return jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.sc.seed), req.rid),
+            len(req.tokens))
+
+    def _sample_rows(self, logits, reqs: list[Request | None]) -> np.ndarray:
+        """logits: [B, V] -> [B] int32 (row i sampled for reqs[i])."""
         if self.sc.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            rng, logits / self.sc.temperature, axis=-1).astype(jnp.int32)
+            return np.asarray(self._argmax(logits))
+        keys = jnp.stack([
+            self._req_key(r) if r is not None
+            else jax.random.PRNGKey(0) for r in reqs])
+        return np.asarray(self._categorical(keys, logits))
 
+    # -- the step loop ----------------------------------------------------
+    def _append_token(self, req: Request, tok: int, slot: int) -> None:
+        """Record a sampled token and retire uniformly on EOS/length.
+
+        EOS is checked for *every* sampled token — including the final one
+        of the budget (the old static engine skipped the check when
+        ``i == max_new_tokens - 1``, so a terminal EOS was reported as a
+        length stop)."""
+        req.tokens.append(int(tok))
+        self.stats["generated_tokens"] += 1
+        if self.sc.eos_id >= 0 and int(tok) == self.sc.eos_id:
+            req.done_reason = "eos"
+        elif len(req.tokens) >= req.max_new_tokens:
+            req.done_reason = "length"
+        if req.done:
+            req.finished_step = self.step_count
+            self.sched.retire(slot)
+            self.kv.release(slot)
+
+    def _start(self, slot: int, req: Request) -> None:
+        """Prefill a newly admitted request and seed its slot."""
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, page = self._prefill(self.params, {"tokens": tokens},
+                                     self._blank_page)
+        if self.ctx.mesh is not None:
+            # prefill_tp -> decode_std boundary: explicit reshard of the
+            # page onto the decode plan before it joins the slot pool.
+            page = self.decode_ctx.reshard(page, self.kv.seq_defs)
+            self.stats["reshards"] += 1
+        self.kv.insert(slot, page, req.prompt_len)
+        self.stats["prefills"] += 1
+        tok = self._sample_rows(logits, [req])[0]
+        self._append_token(req, tok, slot)
+
+    def step(self) -> int:
+        """One engine step: admit, prefill, decode, sample, retire.
+        Returns the number of slots that were active in the decode."""
+        for slot, req in self.sched.admit(self.queue, self.step_count):
+            self._start(slot, req)
+        active = self.sched.active()
+        if active:
+            n = self.sc.n_slots
+            toks = np.zeros((n,), np.int32)
+            pos = np.zeros((n,), np.int32)
+            rows: list[Request | None] = [None] * n
+            for slot, req in active:
+                toks[slot] = req.tokens[-1]
+                # position of the token being fed (the one just sampled).
+                pos[slot] = req.prompt_len + len(req.tokens) - 1
+                rows[slot] = req
+            logits, self.kv.cache, telem = self._decode(
+                self.params, jnp.asarray(toks), self.kv.cache,
+                jnp.asarray(pos))
+            nxt = self._sample_rows(logits, rows)
+            self._record_telemetry(telem, len(active))
+            self.stats["decode_steps"] += 1
+            self.stats["slot_steps_active"] += len(active)
+            self.stats["slot_steps_total"] += n
+            for slot, req in active:
+                # the fed token's KV was just written at pos[slot]
+                self.kv.lengths[slot] = int(pos[slot]) + 1
+                self._append_token(req, nxt[slot], slot)
+        self.step_count += 1
+        return len(active)
+
+    def run(self, max_steps: int | None = None) -> None:
+        """Drive the step loop until every submitted request completes."""
+        steps = 0
+        while self.queue or self.sched.active():
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+
+    # -- telemetry --------------------------------------------------------
+    def _record_telemetry(self, telem, n_active: int) -> None:
+        if telem is None:
+            return
+        entry = {"step": self.step_count, "active": n_active,
+                 "expert_load": np.asarray(telem["expert_load"]),
+                 "overflow": np.asarray(telem["overflow"]),
+                 "n_moe": float(telem["n_moe"])}
+        self.stats["overflow_total"] += float(entry["overflow"].sum())
+        self.telemetry.append(entry)
+
+    @property
+    def slot_utilization(self) -> float:
+        total = self.stats["slot_steps_total"]
+        return self.stats["slot_steps_active"] / total if total else 0.0
+
+    # -- static-batch-compatible front door -------------------------------
     def generate(self, prompts: np.ndarray, max_new_tokens: int
                  ) -> np.ndarray:
-        """prompts: [B, S0] int32 (same length). Returns [B, new] tokens."""
-        b, s0 = prompts.shape
-        cache = pm.materialize(
-            transformer.cache_defs(self.cfg, b, self.sc.max_len),
-            jax.random.PRNGKey(0))
-        logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(prompts, jnp.int32)}, cache)
-        rng = jax.random.PRNGKey(self.sc.seed)
-        out = []
-        tok = self._sample(logits, rng)
-        done = np.zeros((b,), bool)
-        for i in range(max_new_tokens):
-            out.append(np.asarray(tok))
-            if self.sc.eos_id >= 0:
-                done |= np.asarray(tok) == self.sc.eos_id
-                if done.all():
-                    break
-            if i == max_new_tokens - 1:
-                break
-            rng, sub = jax.random.split(rng)
-            logits, cache = self._decode(self.params, tok, cache,
-                                         jnp.int32(s0 + i))
-            tok = self._sample(logits, sub)
-        return np.stack(out, axis=1)
+        """prompts: [B, S0] int32 (same length). Returns [B, new] tokens.
+
+        Convenience wrapper over submit/run on a freshly reset engine: all
+        B requests arrive at step 0 and rows finishing early (EOS) are
+        padded with ``eos_id``."""
+        prompts = np.asarray(prompts)
+        if prompts.shape[0] > self.sc.n_slots:
+            raise ValueError(
+                f"{prompts.shape[0]} prompts > n_slots={self.sc.n_slots}; "
+                f"submit() + run() handles oversubscription")
+        self.reset()
+        reqs = [self.submit(p, max_new_tokens) for p in prompts]
+        self.run()
+        width = max(len(r.tokens) for r in reqs)
+        pad = self.sc.eos_id if self.sc.eos_id >= 0 else 0
+        out = np.full((len(reqs), width), pad, np.int32)
+        for i, r in enumerate(reqs):
+            out[i, :len(r.tokens)] = r.tokens
+        return out

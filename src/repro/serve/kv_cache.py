@@ -1,0 +1,127 @@
+"""SlotKVCache: the per-slot decode-cache pool behind continuous batching.
+
+``transformer.cache_defs(cfg, n_slots, max_len)`` declares one cache page
+per slot (KV ring/full buffers for attention layers, conv/ssm state for
+mamba layers), stacked on the batch axis.  This module owns that pool and
+the three slot operations the scheduler needs:
+
+* ``insert(slot, seq_cache, length)`` — blend a freshly prefilled batch-1
+  cache (already resharded onto the decode plan — see
+  ``MeshContext.reshard``) into one slot.  The write is a one-hot
+  ``where`` over the batch axis rather than a ``dynamic_update_slice``:
+  a DUS at a traced offset on a sharded axis makes GSPMD all-gather the
+  pool every insert, the blend stays shard-local.
+* ``evict(slot)`` — zero a slot's pages (``release`` is the cheap logical
+  variant: insert fully overwrites a page, so retirement only needs the
+  length bookkeeping reset).
+* ``compact(perm)`` — permute slots (gather over the batch axis), e.g. to
+  pack active slots into a prefix before shrinking the pool.
+
+The batch axis is located *per leaf* from the ParamDef axes — stacked
+period leaves carry a leading "layers" axis, tail leaves do not.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import param as pm
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.sharding import context as ctx_lib
+
+
+# The slot ops are module-level jits over flattened leaves with the batch
+# axes as a static tuple: every SlotKVCache of the same shape family
+# (including the pools a ServeEngine.reset() rebuilds) shares one
+# compilation instead of retracing per instance.
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _insert_op(cache_leaves, seq_leaves, slot, *, axes):
+    def one(ax, a, b):
+        hit = jnp.arange(a.shape[ax]) == slot
+        shape = [1] * a.ndim
+        shape[ax] = a.shape[ax]
+        return jnp.where(hit.reshape(shape), b.astype(a.dtype), a)
+    return tuple(one(ax, a, b)
+                 for ax, a, b in zip(axes, cache_leaves, seq_leaves))
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _evict_op(cache_leaves, slot, *, axes):
+    def one(ax, a):
+        hit = jnp.arange(a.shape[ax]) == slot
+        shape = [1] * a.ndim
+        shape[ax] = a.shape[ax]
+        return jnp.where(hit.reshape(shape), jnp.zeros((), a.dtype), a)
+    return tuple(one(ax, a) for ax, a in zip(axes, cache_leaves))
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _compact_op(cache_leaves, perm, *, axes):
+    return tuple(jnp.take(a, perm, axis=ax)
+                 for ax, a in zip(axes, cache_leaves))
+
+
+class SlotKVCache:
+    """Fixed pool of per-sequence cache pages with slot-indexed updates."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 ctx: ctx_lib.MeshContext | None = None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.ctx = ctx
+        self.defs = transformer.cache_defs(cfg, n_slots, max_len)
+        # Per-sequence (batch-1) page layout: what prefill produces and
+        # what insert consumes.
+        self.seq_defs = transformer.cache_defs(cfg, 1, max_len)
+        self._batch_axes = jax.tree_util.tree_map(
+            lambda d: d.axes.index("batch"), self.defs, is_leaf=pm.is_def)
+        self._axes_flat = tuple(
+            jax.tree_util.tree_leaves(self._batch_axes))
+        self._treedef = jax.tree_util.tree_structure(self._batch_axes)
+        cache = pm.materialize(self.defs, jax.random.PRNGKey(0))
+        if ctx is not None and ctx.mesh is not None:
+            cache = ctx.reshard(cache, self.defs)
+        self.cache = cache
+        self.lengths = np.zeros((n_slots,), np.int64)   # tokens cached/slot
+
+    def _leaves(self, tree) -> tuple:
+        return tuple(jax.tree_util.tree_leaves(tree))
+
+    def _unflatten(self, leaves):
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # -- public API -------------------------------------------------------
+    def insert(self, slot: int, seq_cache, length: int) -> None:
+        """Write a prefilled batch-1 cache into ``slot`` (overwrites the
+        whole page, so stale data from the previous tenant cannot leak)."""
+        self.cache = self._unflatten(_insert_op(
+            self._leaves(self.cache), self._leaves(seq_cache),
+            jnp.int32(slot), axes=self._axes_flat))
+        self.lengths[slot] = length
+
+    def release(self, slot: int) -> None:
+        """Logical free: the next insert overwrites the page in full."""
+        self.lengths[slot] = 0
+
+    def evict(self, slot: int) -> None:
+        """Zero a slot's pages (release + hygiene, e.g. for checkpoints)."""
+        self.cache = self._unflatten(_evict_op(
+            self._leaves(self.cache), jnp.int32(slot),
+            axes=self._axes_flat))
+        self.lengths[slot] = 0
+
+    def compact(self, perm) -> None:
+        """Permute slots: page i of the new pool is page perm[i] of the
+        old one (gather over the batch axis, shard-local under GSPMD)."""
+        perm = np.asarray(perm)
+        assert sorted(perm.tolist()) == list(range(self.n_slots)), perm
+        self.cache = self._unflatten(_compact_op(
+            self._leaves(self.cache), jnp.asarray(perm, jnp.int32),
+            axes=self._axes_flat))
+        self.lengths = self.lengths[perm]

@@ -1,0 +1,120 @@
+"""Request admission and slot-pool scheduling for the serving engine.
+
+The engine owns a fixed pool of ``n_slots`` sequence slots (static shapes:
+the decode step is one jitted call over the whole pool every step).  The
+scheduler's job is the part XLA cannot do — deciding *which* request
+occupies which slot at which step:
+
+* :class:`Request` — one generation job: prompt, budget, and (as the
+  engine runs) the sampled tokens and completion state.
+* :class:`RequestQueue` — FIFO admission with per-request ``arrival``
+  steps, so staggered traffic can be replayed deterministically.
+* :class:`Scheduler` — the slot pool.  ``policy="continuous"`` admits a
+  queued request the moment any slot frees (continuous batching — no
+  batch-drain stalls); ``policy="static"`` only admits into an *empty*
+  pool (the classic static-batch baseline, kept for the serve benchmark's
+  before/after comparison).
+
+All of this is host-side bookkeeping over numpy/python state; device work
+(prefill, decode, KV writes) stays in ``engine.py`` / ``kv_cache.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle state."""
+
+    rid: int
+    prompt: np.ndarray                  # [S0] int32
+    max_new_tokens: int
+    arrival: int = 0                    # engine step at which it may admit
+    # Filled in by the engine:
+    tokens: list = dataclasses.field(default_factory=list)
+    done_reason: str | None = None      # "eos" | "length"
+    admitted_step: int | None = None
+    finished_step: int | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.done_reason is not None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[-1])
+
+
+class RequestQueue:
+    """FIFO queue with arrival times (for replaying staggered traffic)."""
+
+    def __init__(self):
+        self._q: list[Request] = []
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop_ready(self, step: int) -> Request | None:
+        """Earliest-submitted request whose arrival step has passed."""
+        for i, req in enumerate(self._q):
+            if req.arrival <= step:
+                return self._q.pop(i)
+        return None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+class Scheduler:
+    """Fixed slot pool with continuous (default) or batch-drain admission."""
+
+    def __init__(self, n_slots: int, policy: str = "continuous"):
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown scheduling policy {policy!r}")
+        self.n_slots = n_slots
+        self.policy = policy
+        self.slots: list[Request | None] = [None] * n_slots
+        self.admitted = 0
+        self.retired = 0
+        self.max_concurrent = 0
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def active(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def admit(self, queue: RequestQueue, step: int
+              ) -> list[tuple[int, Request]]:
+        """Move ready requests from the queue into free slots.
+
+        Continuous policy fills every free slot; static policy only admits
+        when the whole pool has drained (the baseline's stall, on purpose).
+        """
+        if self.policy == "static" and any(r is not None for r in self.slots):
+            return []
+        out = []
+        for slot in self.free_slots():
+            req = queue.pop_ready(step)
+            if req is None:
+                break
+            req.admitted_step = step
+            self.slots[slot] = req
+            out.append((slot, req))
+        self.admitted += len(out)
+        self.max_concurrent = max(self.max_concurrent,
+                                  len(self.active()))
+        return out
+
+    def retire(self, slot: int) -> Request:
+        req = self.slots[slot]
+        assert req is not None, f"retire of empty slot {slot}"
+        self.slots[slot] = None
+        self.retired += 1
+        return req

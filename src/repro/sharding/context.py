@@ -239,6 +239,21 @@ class MeshContext:
             return self.shd(d.shape, d.axes, fallbacks)
         return jax.tree_util.tree_map(one, def_tree, is_leaf=pm.is_def)
 
+    # -- resharding -------------------------------------------------------
+    def reshard(self, tree, def_tree, fallbacks: list | None = None):
+        """Explicitly relayout a materialized tree onto THIS context's plan.
+
+        The plan-boundary primitive (e.g. the serving prefill_tp →
+        decode_std handoff): every leaf is ``device_put`` against the
+        sharding this context resolves for the matching ``ParamDef`` —
+        an eager, observable cross-plan move rather than whatever layout
+        the producing jit happened to leave the arrays in.  Off-mesh this
+        is the identity.
+        """
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, self.tree_shardings(def_tree, fallbacks))
+
     # -- constraints ------------------------------------------------------
     def with_constraint(self, x, logical_axes):
         """Apply a logical sharding constraint inside jit (no-op off-mesh).

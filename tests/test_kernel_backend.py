@@ -246,6 +246,123 @@ def test_train_step_equivalence_scan_remat_stack():
 
 
 # ---------------------------------------------------------------------------
+# hierarchical MoE through the registry (ROADMAP open item: no more direct
+# jnp path) — ref vs pallas parity, forward and gradients
+# ---------------------------------------------------------------------------
+
+HMOE_KW = dict(n_groups=4, n_experts_per_group=4, k_primary=2,
+               k_secondary=2, d_model=16, d_ff=32, dtype=jnp.float32,
+               capacity_factor=4.0)
+
+
+def _hmoe_setup():
+    from repro.core.hierarchical import HMoEArgs, hmoe_defs
+    params = pm.materialize(hmoe_defs(HMoEArgs(**HMOE_KW)),
+                            jax.random.PRNGKey(0))
+    params["gate_primary"]["wg"] = 0.5 * jax.random.normal(
+        jax.random.PRNGKey(7), (16, 4))
+    params["gate_secondary"]["wg"] = 0.5 * jax.random.normal(
+        jax.random.PRNGKey(8), (4, 16, 4))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    return params, x
+
+
+@pytest.mark.parametrize("train", [False, True])
+def test_hmoe_backend_parity(train):
+    from repro.core.hierarchical import HMoEArgs, hmoe_apply
+    params, x = _hmoe_setup()
+    rng = jax.random.PRNGKey(2)
+    y_ref, aux_ref = hmoe_apply(params, x,
+                                HMoEArgs(**HMOE_KW, kernel_backend="ref"),
+                                train=train, rng=rng)
+    y_pal, aux_pal = hmoe_apply(params, x,
+                                HMoEArgs(**HMOE_KW,
+                                         kernel_backend="pallas"),
+                                train=train, rng=rng)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(float(aux_pal["aux_loss"]),
+                               float(aux_ref["aux_loss"]), rtol=1e-4)
+    # serving telemetry over the flattened (group, expert) grid
+    assert aux_ref["telemetry"]["expert_load"].shape == (16,)
+    np.testing.assert_allclose(
+        np.asarray(aux_pal["telemetry"]["expert_load"]),
+        np.asarray(aux_ref["telemetry"]["expert_load"]))
+
+
+def test_hmoe_backend_grad_parity():
+    from repro.core.hierarchical import HMoEArgs, hmoe_apply
+    params, x = _hmoe_setup()
+    rng = jax.random.PRNGKey(2)
+
+    def loss(p, backend):
+        y, aux = hmoe_apply(p, x, HMoEArgs(**HMOE_KW,
+                                           kernel_backend=backend),
+                            train=True, rng=rng)
+        return jnp.sum(y ** 2) + aux["aux_loss"]
+
+    g_ref = jax.grad(lambda p: loss(p, "ref"))(params)
+    g_pal = jax.grad(lambda p: loss(p, "pallas"))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_hmoe_unknown_backend_raises():
+    from repro.core.hierarchical import HMoEArgs, hmoe_apply
+    params, x = _hmoe_setup()
+    with pytest.raises(bk_lib.KernelBackendError):
+        hmoe_apply(params, x,
+                   HMoEArgs(**HMOE_KW, kernel_backend="does_not_exist"),
+                   train=False)
+
+
+# ---------------------------------------------------------------------------
+# VMEM-footprint guard on the fused dispatch/combine kernel (ROADMAP open
+# item 3 guard; the E-blocked variant stays future work)
+# ---------------------------------------------------------------------------
+
+def test_dispatch_vmem_guard_raises_directly():
+    from repro.kernels import dispatch as dl
+    # estimate helper: [E, C, d] buffer + token block, in bytes
+    assert dl.vmem_bytes(8, 64, 32, jnp.float32) == 8 * 64 * 32 * 4
+    with pytest.raises(dl.DispatchVMEMError, match="VMEM"):
+        dl.check_vmem(1024, 4096, 4096, jnp.float32, limit=1 << 20)
+    x = jnp.ones((16, 8), jnp.float32)
+    eidx = jnp.zeros((16, 2), jnp.int32)
+    pos = jnp.tile(jnp.arange(2, dtype=jnp.int32)[None], (16, 1))
+    with pytest.raises(dl.DispatchVMEMError):
+        dl.dispatch(x, eidx, pos, n_experts=4, capacity=8, vmem_limit=16)
+    buf = jnp.ones((4, 8, 8), jnp.float32)
+    with pytest.raises(dl.DispatchVMEMError):
+        dl.combine(buf, jnp.ones((16, 2)), eidx, pos, vmem_limit=16)
+    # default limit admits the small shape
+    assert dl.dispatch(x, eidx, pos, n_experts=4, capacity=8).shape \
+        == (4, 8, 8)
+
+
+def test_backend_vmem_guard_falls_back_to_ref():
+    """Past the configured budget the pallas backend must route
+    dispatch/combine to the ref scatter (same numerics) instead of
+    OOMing — MoEArgs.dispatch_vmem_limit is the knob."""
+    params = pm.materialize(moe_defs(MoEArgs(**MOE_KW)),
+                            jax.random.PRNGKey(0))
+    params["gate"]["wg"] = 0.5 * jax.random.normal(jax.random.PRNGKey(7),
+                                                   (16, 8))
+    x = jax.random.normal(jax.random.PRNGKey(1), (100, 16))
+    y_pal, _ = moe_apply(params, x,
+                         MoEArgs(**MOE_KW, kernel_backend="pallas"),
+                         train=False)
+    y_fb, _ = moe_apply(params, x,
+                        MoEArgs(**MOE_KW, kernel_backend="pallas",
+                                dispatch_vmem_limit=64),
+                        train=False)
+    np.testing.assert_allclose(np.asarray(y_fb), np.asarray(y_pal),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # 8-device fake mesh (subprocess, like test_distributed.py)
 # ---------------------------------------------------------------------------
 
