@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test-tier1 test-slow test-all test-kernels test-serve \
-	bench-micro bench-serve
+	test-routing bench-micro bench-serve
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
@@ -21,6 +21,12 @@ test-kernels:
 # just it: scheduler/slot-pool semantics, sequential parity, reshard).
 test-serve:
 	$(PY) -m pytest -q tests/test_serve.py
+
+# Router API suite (part of tier-1): RouterSpec/registry semantics, the
+# deprecation shim, policy parity (noisy_topk/expert_choice), masking.
+test-routing:
+	$(PY) -m pytest -q tests/test_router.py tests/test_gating.py \
+		tests/test_moe.py
 
 # The slow tier (multi-device subprocess equivalence, training curves).
 test-slow:

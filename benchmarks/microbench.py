@@ -65,6 +65,30 @@ def run():
     us = time_call(full, params, x)
     emit("micro_moe_layer_full", us, f"T={T} E={E} k={K} cap={cap}")
 
+    # --- router section: policy comparison through the registry ---------
+    # (noisy_topk vs expert_choice vs dead-slot-masked gating, all through
+    # the one RouterSpec path — the BENCH_micro.json trajectory shows what
+    # a policy swap costs on the same layer shape.)
+    from repro.core import router as rl
+
+    def _router_row(name, spec, mask=None, extra=""):
+        aR = MoEArgs(n_experts=E, k=K, d_model=D, d_ff=FF,
+                     dtype=jnp.float32, router=spec)
+        pR = pm.materialize(moe_defs(aR), jax.random.PRNGKey(0))
+        pR["gate"]["wg"] = params["gate"]["wg"]
+        fn = jax.jit(lambda pr, x, m: moe_apply(pr, x, aR, train=False,
+                                                mask=m)[0])
+        us = time_call(fn, pR, x, mask)
+        emit(f"router_{name}", us, f"T={T} E={E} k={K}{extra}")
+
+    spec_nt = rl.RouterSpec(policy="noisy_topk", capacity_factor=2.0)
+    spec_ec = rl.RouterSpec(policy="expert_choice", capacity_factor=2.0)
+    half = jnp.concatenate([jnp.ones((T // 2,)), jnp.zeros((T - T // 2,))])
+    _router_row("noisy_topk", spec_nt)
+    _router_row("expert_choice", spec_ec)
+    _router_row("noisy_topk_masked", spec_nt, mask=half,
+                extra=" occupancy=50%")
+
     # --- kernel_backend section: ref vs pallas per registry op ----------
     # (pallas rows are interpret-mode on CPU hosts — the trajectory shows
     # the dispatch overhead trend, not MXU throughput.)

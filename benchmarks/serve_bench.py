@@ -104,6 +104,31 @@ def run() -> None:
              f"util={c['util']:.2f};lat_mean={c['mean_latency_steps']:.1f};"
              f"speedup={c['tok_s'] / s['tok_s']:.2f}x")
 
+    # --- dead-slot routing mask under partial occupancy ------------------
+    # Tight capacity (1 slot/expert) + sparse arrivals keep most of an
+    # 8-slot pool empty: with the router's occupancy mask dead slots stop
+    # competing for expert capacity, so overflow drops, and the padded-
+    # prefill buckets cut the compile count for the non-power-of-two
+    # prompt lengths; the unmasked/exact engine is the pre-router
+    # baseline (docs/routing.md, docs/serving.md).
+    from repro.core.router import RouterSpec
+    tight = cfg.replace(router=RouterSpec(capacity_factor=0.5,
+                                          capacity_multiple=1))
+    sparse = [(rng.randint(1, cfg.vocab_size,
+                           ((6, 10, 12, 13)[i % 4],)).astype(np.int32),
+               (10, 6, 8, 6)[i % 4], i * 4) for i in range(12)]
+    for masked in (False, True):
+        eng = ServeEngine(params, tight, ServeConfig(
+            max_len=64, n_slots=8, mask_dead_slots=masked,
+            prefill_buckets=masked))
+        _run_trace(eng, sparse)                       # warm the jit cache
+        r = _run_trace(eng, sparse)
+        tag = "masked" if masked else "unmasked"
+        emit(f"serve_occupancy_{tag}", r["wall_s"] * 1e6,
+             f"tok_s={r['tok_s']:.1f};util={r['util']:.2f};"
+             f"overflow={eng.stats['overflow_total']:.0f};"
+             f"prefill_compiles={len(eng.prefill_lengths)}")
+
 
 if __name__ == "__main__":
     import json

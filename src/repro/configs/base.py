@@ -12,6 +12,8 @@ from typing import Any, Callable
 
 import jax.numpy as jnp
 
+from repro.core.router import DEFAULT_CAPACITY_FACTOR, RouterSpec
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerKind:
@@ -43,7 +45,15 @@ class ModelConfig:
     moe_d_ff: int = 0
     moe_hierarchical: tuple[int, int] | None = None   # (groups, per-group)
     dense_residual: bool = False           # arctic: MoE + parallel dense FFN
-    capacity_factor: float = 1.25
+    # The one routing configuration path (docs/routing.md): a RouterSpec
+    # carrying policy/k/capacity/noise/balance weights.  None resolves the
+    # deprecated fields below (gating_mode/capacity_factor/...) into one;
+    # the spec's k inherits moe_k.
+    router: RouterSpec | None = None
+    # Deprecated routing spellings (router.resolve_spec shim).  The
+    # capacity default is unified in RouterSpec (this used to say 1.25
+    # while MoEArgs said 2.0 — two disagreeing defaults for one knob).
+    capacity_factor: float = DEFAULT_CAPACITY_FACTOR
     w_importance: float = 0.1              # paper §C.1 defaults
     w_load: float = 0.1
     gating_mode: str = "noisy_topk"

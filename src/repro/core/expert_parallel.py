@@ -30,8 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import dispatch as dsp
-from repro.core import gating, losses
+from repro.core import losses
+from repro.core import router as router_lib
 from repro.core.moe import MoEArgs
 from repro.kernels import backend as backend_lib
 from repro.sharding import context as ctx_lib
@@ -40,13 +40,16 @@ from repro.sharding import context as ctx_lib
 def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
                ep_axis: str, fsdp_axis: str | None, ep: int,
                bk: backend_lib.KernelBackend,
+               router: router_lib.Router,
                body_ctx: ctx_lib.MeshContext | None):
     """Body executed per shard under shard_map.
 
     ``ep`` is the ep-axis size, passed from the mesh at the shard_map
     boundary (0.4.x jax cannot query a mapped axis's size by name).
-    ``bk`` is the resolved kernel backend; ``body_ctx`` the Manual-mode
-    context its ops use to derive per-shard block specs."""
+    ``bk`` is the resolved kernel backend; ``router`` the resolved Router
+    (routing runs locally on each shard's tokens — data-parallel gating,
+    §3.2); ``body_ctx`` the Manual-mode context the backend ops use to
+    derive per-shard block specs."""
     ep_rank = jax.lax.axis_index(ep_axis)
     t_local, d = x_local.shape
     assert a.n_experts % ep == 0, (a.n_experts, ep)
@@ -58,12 +61,9 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
         if fsdp_axis is not None:
             rng = jax.random.fold_in(rng, jax.lax.axis_index(fsdp_axis))
 
-    info = gating.noisy_topk_gating(params["gate"], x_local, a.k,
-                                    train=train, rng=rng,
-                                    topk_impl=bk.topk_impl)
-    capacity = dsp.capacity_for(t_local, a.n_experts, a.k, a.capacity_factor)
-    p = dsp.plan(info.expert_index, info.combine_weights, a.n_experts,
-                 capacity, priority=a.priority_dispatch)
+    dec = router.route(params, x_local, train=train, rng=rng)
+    info, p = dec, dec.plan
+    capacity = p.capacity
     buf = bk.dispatch(x_local, p, a)                   # [E, C, d] local
 
     # all_to_all #1: expert-major exchange.  [E, C, d] -> [E/ep, ep*C, d]
@@ -95,8 +95,7 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
     out = out.reshape(a.n_experts, capacity, d)
 
     y = bk.combine(out, p, a, dtype=x_local.dtype)
-    aux_loss = (losses.importance_loss(info.gates, a.w_importance)
-                + losses.load_loss(info.load, a.w_load))
+    aux_loss = dec.aux_loss
     # Balance statistics are over the *global* batch: psum the raw vectors.
     axes = (ep_axis,) if fsdp_axis is None else (ep_axis, fsdp_axis)
     imp = jax.lax.psum(losses.importance(info.gates), axes)
@@ -134,6 +133,7 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
         mesh = ctx.mesh
     assert mesh is not None, "moe_apply_ep needs a mesh (ctx or positional)"
     bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
+    router = router_lib.build(a, topk_impl=bk.topk_impl)
     # Context for the shard_map body: every mesh axis is Manual on 0.4.x,
     # so backend ops derive per-shard [E/ep, C, d] block specs from it.
     # Only meaningful when the plan's expert axis is the ep axis we use.
@@ -151,11 +151,15 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
     }
     if "w3" in params:
         w_specs["w3"] = P(ep_axis, fsdp_axis, None)
+    if "thresholds" in params:      # Appendix-F policy params: replicated
+        w_specs["thresholds"] = jax.tree_util.tree_map(
+            lambda _: P(None), params["thresholds"])
     aux_spec = {"aux_loss": P(), "metrics": {
         "cv_importance": P(), "cv_load": P(), "max_over_mean_load": P(),
         "fraction_dropped": P()}}
     fn = functools.partial(_local_moe, a=a, train=train, rng=rng,
                            ep_axis=ep_axis, fsdp_axis=fsdp_axis,
-                           ep=mesh.shape[ep_axis], bk=bk, body_ctx=body_ctx)
+                           ep=mesh.shape[ep_axis], bk=bk, router=router,
+                           body_ctx=body_ctx)
     return ctx_lib.shard_map(fn, mesh, (w_specs, token_spec),
                              (token_spec, aux_spec))(params, x)

@@ -150,20 +150,30 @@ def noisy_topk_gating(
                       gates=gates, load=load, raw_logits=clean)
 
 
-def batchwise_gating(params, x: jax.Array, k: int) -> GatingInfo:
+def batchwise_gating(params, x: jax.Array, k: int,
+                     valid: jax.Array | None = None) -> GatingInfo:
     """Appendix F, Eq. (16)+(18): keep the top m = k*T/E tokens *per expert*.
 
     Every expert receives exactly m tokens — perfectly static shapes, which is
     why the paper used it "if every expert received exactly the same batch
     size", and why it is the TPU-native gating mode here.
+
+    ``valid`` ([T] in {0,1}) masks padding / dead-slot rows: masked rows
+    are never selected and contribute nothing to gates or load.
     """
     g_sigma = softmax_gating(params, x)                             # [T, E]
+    if valid is not None:
+        g_sigma = g_sigma * jnp.asarray(valid, jnp.float32)[:, None]
     t, e = g_sigma.shape
     m = max((k * t) // e, 1)
     # top-m per expert over the batch axis.
     col_vals, col_idx = jax.lax.top_k(g_sigma.T, m)                 # [E, m]
     mask = jnp.zeros((e, t), jnp.float32).at[
         jnp.arange(e)[:, None], col_idx].set(1.0).T                 # [T, E]
+    if valid is not None:
+        # masked rows may be "picked" as zero-valued filler when an expert
+        # has fewer than m valid tokens; keep them out of load and gates.
+        mask = mask * jnp.asarray(valid, jnp.float32)[:, None]
     masked = g_sigma * mask
     denom = jnp.sum(masked, axis=-1, keepdims=True)
     gates = masked / jnp.maximum(denom, 1e-9)                       # Eq. (16)
@@ -179,10 +189,13 @@ def batchwise_gating(params, x: jax.Array, k: int) -> GatingInfo:
                       raw_logits=jnp.log(jnp.maximum(g_sigma, 1e-20)))
 
 
-def threshold_gating(params, thresholds, x: jax.Array, k: int) -> GatingInfo:
+def threshold_gating(params, thresholds, x: jax.Array, k: int,
+                     valid: jax.Array | None = None) -> GatingInfo:
     """Appendix F inference path, Eq. (19): M_i = 1 if g_i > T_i."""
     g_sigma = softmax_gating(params, x)
     mask = (g_sigma > jnp.asarray(thresholds["t"], jnp.float32)[None, :])
+    if valid is not None:
+        mask = mask * (jnp.asarray(valid, jnp.float32)[:, None] > 0)
     masked = g_sigma * mask
     denom = jnp.sum(masked, axis=-1, keepdims=True)
     gates = masked / jnp.maximum(denom, 1e-9)

@@ -1,12 +1,22 @@
 """The Sparsely-Gated Mixture-of-Experts layer (§2) as a composable module.
 
-``moe_defs`` declares the parameters; ``moe_apply`` runs gating → dispatch →
+``moe_defs`` declares the parameters; ``moe_apply`` runs routing → dispatch →
 expert FFN → combine and returns (output, aux) where aux carries the §4
 balancing losses and the Table-6 diagnostics.
 
 Expert networks are the paper's one-hidden-layer ReLU FFNs by default;
 ``activation="swiglu"`` upgrades them to gated-SiLU experts (w1/w3/w2) for
 the modern architectures in the zoo (kimi-k2, arctic, jamba).
+
+Routing is configured by a single :class:`repro.core.router.RouterSpec`
+(``MoEArgs.router``, docs/routing.md): policy, k, train/eval capacity
+factors, noise, balance-loss weights.  ``router.route(params, x,
+mask=...)`` returns a typed :class:`~repro.core.router.RouteDecision`; the
+legacy ``gating_mode``/``dispatch_impl``/``expert_impl`` strings (and the
+old per-carrier ``capacity_factor`` floats) are a deprecated shim that
+``router.resolve_spec`` folds into a spec.  ``mask`` marks valid tokens —
+the serving engine passes slot occupancy so dead slots neither route nor
+consume expert capacity.
 
 The hot-path ops (top-k gating, dispatch/combine, expert FFN) route
 through the kernel backend registry (``repro.kernels.backend``,
@@ -23,6 +33,7 @@ schedule lives in ``expert_parallel.py``; this module uses GSPMD constraints.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -30,7 +41,8 @@ import jax.numpy as jnp
 
 from repro.common.param import ParamDef
 from repro.core import dispatch as dsp
-from repro.core import gating, losses
+from repro.core import gating
+from repro.core import router as router_lib
 from repro.kernels import backend as backend_lib
 from repro.sharding import context as ctx_lib
 
@@ -42,13 +54,25 @@ class MoEArgs:
     d_model: int
     d_ff: int
     activation: str = "relu"            # relu (paper) | swiglu
+    # --- routing ------------------------------------------------------------
+    # The one configuration path for gating/dispatch/capacity (docs/
+    # routing.md).  None resolves the deprecated string/float fields below
+    # into a spec; the spec's k inherits from ``k`` above.
+    router: "router_lib.RouterSpec | None" = None
+    # Deprecated spellings (router.resolve_spec shim; DeprecationWarning):
     gating_mode: str = "noisy_topk"     # noisy_topk | batchwise | threshold
-    capacity_factor: float = 2.0
-    eval_capacity_factor: float = 2.0
+    capacity_factor: float | None = None   # None = RouterSpec default (2.0)
+    # None = same as training.  NOTE: this used to default to 2.0
+    # *independently* of capacity_factor, so a legacy caller that set only
+    # capacity_factor evaluated at 2.0; it now evaluates at the training
+    # factor (set eval_capacity_factor explicitly to pin the old value).
+    eval_capacity_factor: float | None = None
     w_importance: float = 0.1           # paper §C.1
     w_load: float = 0.1
     dispatch_impl: str = "sort"         # sort | einsum (ref backend only)
     expert_impl: str = "einsum"         # legacy spelling of kernel_backend
+    priority_dispatch: bool = False
+    # --- kernels ------------------------------------------------------------
     # Kernel backend for the hot path (see repro/kernels/backend.py):
     # "ref" | "pallas"; None derives from the legacy expert_impl field.
     # Resolution is explicit — an unknown or broken backend raises
@@ -59,30 +83,27 @@ class MoEArgs:
     # Past the limit the pallas backend falls back to the ref scatter
     # instead of silently OOMing (the E-blocked variant is future work).
     dispatch_vmem_limit: int | None = None
-    priority_dispatch: bool = False
     sigmoid_output: bool = False        # paper's LM passes MoE out thru sigmoid
     wide_dispatch: bool = True          # §3.1 combined-batch token resharding
     dtype: Any = jnp.bfloat16
 
 
 def moe_defs(a: MoEArgs) -> dict:
+    spec = router_lib.resolve_spec(a)
     gated = a.activation == "swiglu"
-    defs = {
-        "gate": gating.gating_defs(a.d_model, a.n_experts,
-                                   noisy=a.gating_mode == "noisy_topk"),
+    defs = dict(router_lib.Router(spec, a.n_experts).gate_defs(a.d_model))
+    defs.update({
         "w1": ParamDef((a.n_experts, a.d_model, a.d_ff),
                        ("experts", "expert_embed", "expert_mlp"),
                        dtype=a.dtype, fan_in=a.d_model),
         "w2": ParamDef((a.n_experts, a.d_ff, a.d_model),
                        ("experts", "expert_mlp", "expert_embed"),
                        dtype=a.dtype, fan_in=a.d_ff),
-    }
+    })
     if gated:
         defs["w3"] = ParamDef((a.n_experts, a.d_model, a.d_ff),
                               ("experts", "expert_embed", "expert_mlp"),
                               dtype=a.dtype, fan_in=a.d_model)
-    if a.gating_mode == "threshold":
-        defs["thresholds"] = gating.threshold_defs(a.n_experts)
     return defs
 
 
@@ -98,82 +119,55 @@ def expert_ffn(params, x: jax.Array, a: MoEArgs,
 def run_gating(params, x: jax.Array, a: MoEArgs, *, train: bool,
                rng: jax.Array | None,
                topk_impl=None) -> gating.GatingInfo:
-    if a.gating_mode == "noisy_topk":
-        return gating.noisy_topk_gating(params["gate"], x, a.k,
-                                        train=train, rng=rng,
-                                        topk_impl=topk_impl)
-    if a.gating_mode == "batchwise":
-        return gating.batchwise_gating(params["gate"], x, a.k)
-    if a.gating_mode == "threshold":
-        if train:  # train with the batchwise mask, infer with thresholds
-            return gating.batchwise_gating(params["gate"], x, a.k)
-        return gating.threshold_gating(params["gate"], params["thresholds"],
-                                       x, a.k)
-    raise ValueError(f"unknown gating mode {a.gating_mode!r}")
+    """Deprecated: use ``router.build(a).route(...)`` (docs/routing.md).
+
+    ``raw_logits`` is reconstructed as log-gates (the batchwise/threshold
+    convention) — RouteDecision does not carry the pre-noise logits."""
+    warnings.warn("run_gating is deprecated; use repro.core.router "
+                  "(build(a).route(...))", DeprecationWarning, stacklevel=2)
+    dec = router_lib.build(a, topk_impl=topk_impl).route(
+        params, x, train=train, rng=rng)
+    return gating.GatingInfo(
+        combine_weights=dec.combine_weights,
+        expert_index=dec.expert_index, gates=dec.gates, load=dec.load,
+        raw_logits=jnp.log(jnp.maximum(dec.gates, 1e-20)))
 
 
 def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
               rng: jax.Array | None = None,
-              ctx: ctx_lib.MeshContext | None = None
+              ctx: ctx_lib.MeshContext | None = None,
+              mask: jax.Array | None = None
               ) -> tuple[jax.Array, dict]:
     """x: [T, d_model] (tokens already flattened — the paper's 'convolutional'
     application over all positions of a batch, §3.1).
 
     ``ctx`` is the explicit sharding context; ``None`` resolves the
-    contextvar (identity constraints off-mesh)."""
+    contextvar (identity constraints off-mesh).  ``mask`` ([T] in {0,1})
+    marks valid tokens: masked tokens (dead serving slots, bucketed-
+    prefill padding) get zero gate weight, zero load/telemetry, and
+    consume no expert capacity."""
     t, d = x.shape
     bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
-    info = run_gating(params, x, a, train=train, rng=rng,
-                      topk_impl=bk.topk_impl)
-
-    cf = a.capacity_factor if train else a.eval_capacity_factor
-    if a.gating_mode in ("batchwise", "threshold") and train:
-        # Appendix F: exactly m = k·T/E slots per expert; nothing dropped.
-        capacity = max((a.k * t) // a.n_experts, 1)
-        capacity = int(-(-capacity // 8) * 8)
-    else:
-        capacity = dsp.capacity_for(t, a.n_experts, a.k, cf)
-    p = dsp.plan(info.expert_index, info.combine_weights, a.n_experts,
-                 capacity, priority=a.priority_dispatch)
+    router = router_lib.build(a, topk_impl=bk.topk_impl)
+    dec = router.route(params, x, train=train, rng=rng, mask=mask)
 
     token_axis = "tokens" if a.wide_dispatch else "batch"
     x = ctx_lib.with_constraint(x, (token_axis, "embed"), ctx)
-    buf = bk.dispatch(x, p, a, ctx=ctx)
+    buf = bk.dispatch(x, dec, a, ctx=ctx)
     buf = ctx_lib.with_constraint(
         buf, ("experts", "expert_capacity", "embed"), ctx)
     out = bk.expert_ffn(params, buf, a, ctx=ctx)
     out = ctx_lib.with_constraint(
         out, ("experts", "expert_capacity", "embed"), ctx)
-    y = bk.combine(out, p, a, dtype=x.dtype, ctx=ctx)
+    y = bk.combine(out, dec, a, dtype=x.dtype, ctx=ctx)
     y = ctx_lib.with_constraint(y, (token_axis, "embed"), ctx)
     if a.sigmoid_output:
         y = jax.nn.sigmoid(y.astype(jnp.float32)).astype(x.dtype)
 
-    aux_loss = (losses.importance_loss(info.gates, a.w_importance)
-                + losses.load_loss(info.load, a.w_load))
-    if a.gating_mode == "threshold" and train:
-        aux_loss = aux_loss + gating.batchwise_threshold_loss(
-            params["gate"], params["thresholds"], x, a.k)
-    metrics = losses.balance_metrics(info.gates, info.load)
-    metrics["fraction_dropped"] = p.fraction_dropped
-    return y, {"aux_loss": aux_loss, "metrics": metrics,
-               "telemetry": gating_telemetry(info, p)}
+    return y, {"aux_loss": dec.aux_loss, "metrics": dec.metrics,
+               "telemetry": dec.telemetry}
 
 
 def gating_telemetry(info: gating.GatingInfo, p: dsp.DispatchPlan) -> dict:
-    """Per-expert serving counters from one gating/dispatch decision.
-
-    ``expert_load``: hard assignment counts (tokens routed per expert),
-    ``overflow``: assignments dropped by capacity truncation per expert.
-    Consumed by the serving telemetry path (stack_decode accumulates these
-    across MoE layers); the train path drops them in ``_add_aux``.
-    """
-    assigned = (info.combine_weights > 0.0).reshape(-1)
-    kept = (p.position < p.capacity).reshape(-1)
-    flat_e = info.expert_index.reshape(-1)
-    zero = jnp.zeros((p.n_experts,), jnp.float32)
-    return {
-        "expert_load": zero.at[flat_e].add(assigned.astype(jnp.float32)),
-        "overflow": zero.at[flat_e].add(
-            (assigned & ~kept).astype(jnp.float32)),
-    }
+    """Back-compat alias for :func:`repro.core.router.route_telemetry`."""
+    return router_lib.route_telemetry(info, p)

@@ -165,11 +165,36 @@ def resolve(a) -> KernelBackend:
     layer never silently degrades to a different implementation."""
     name = getattr(a, "kernel_backend", None)
     if name is None:
-        name = "pallas" if getattr(a, "expert_impl", "einsum") == "pallas" \
-            else "ref"
+        legacy = getattr(a, "expert_impl", "einsum")
+        if legacy != "einsum":
+            import warnings
+            warnings.warn(
+                f"expert_impl={legacy!r} is a deprecated spelling; set "
+                "kernel_backend explicitly (docs/kernels.md)",
+                DeprecationWarning, stacklevel=2)
+        name = "pallas" if legacy == "pallas" else "ref"
     backend = get(name)
     log.debug("kernel backend resolved: %s", name)
     return backend
+
+
+# ---------------------------------------------------------------------------
+# plan unwrapping + dispatch flavour
+# ---------------------------------------------------------------------------
+
+def _as_plan(p) -> dsp.DispatchPlan:
+    """Backends accept a router ``RouteDecision`` wherever they accept a
+    ``DispatchPlan`` — the typed decision carries the plan."""
+    return getattr(p, "plan", p)
+
+
+def _dispatch_impl(a) -> str:
+    """Scatter flavour for the ref backend: the RouterSpec's ``dispatch``
+    field when a spec is configured, else the legacy ``dispatch_impl``."""
+    spec = getattr(a, "router", None)
+    if spec is not None:
+        return spec.dispatch
+    return getattr(a, "dispatch_impl", "sort")
 
 
 # ---------------------------------------------------------------------------
@@ -193,13 +218,15 @@ def _ref_expert_ffn(params, x, a, *, ctx=None):
 
 
 def _ref_dispatch(x, p, a, *, ctx=None):
-    if a.dispatch_impl == "einsum":
+    p = _as_plan(p)
+    if _dispatch_impl(a) == "einsum":
         return dsp.dispatch_einsum(x, p)
     return dsp.dispatch(x, p)
 
 
 def _ref_combine(buf, p, a, *, dtype=None, ctx=None):
-    if a.dispatch_impl == "einsum":
+    p = _as_plan(p)
+    if _dispatch_impl(a) == "einsum":
         return dsp.combine_einsum(buf, p, dtype=dtype)
     return dsp.combine(buf, p, dtype=dtype)
 
@@ -253,6 +280,7 @@ def _register_pallas() -> None:
                               bm=bp.bm, bn=bp.bn, bk=bp.bk)
 
     def _pallas_dispatch(x, p, a, *, ctx=None):
+        p = _as_plan(p)
         # p.n_experts is authoritative: the EP schedule dispatches local
         # tokens into *global*-E buffers before its all_to_all exchange.
         if not _vmem_ok(a, p.n_experts, p.capacity, x.shape[-1], x.dtype,
@@ -264,6 +292,7 @@ def _register_pallas() -> None:
                                                None))
 
     def _pallas_combine(buf, p, a, *, dtype=None, ctx=None):
+        p = _as_plan(p)
         # Same estimate as ops.combine's own guard (the [block_t, d]
         # output block rides along with the resident buffer) so borderline
         # shapes fall back here instead of raising one layer down.

@@ -18,6 +18,7 @@ import jax
 
 from repro.common import param as pm
 from repro.configs.base import get_config
+from repro.core import router as router_lib
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import reduced
 from repro.models import lm
@@ -43,11 +44,30 @@ def main():
     ap.add_argument("--policy", choices=("continuous", "static"),
                     default="continuous",
                     help="static = batch-drain baseline")
+    ap.add_argument("--router-policy", default=None,
+                    help="routing policy override (docs/routing.md)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="capacity-factor override (RouterSpec)")
+    ap.add_argument("--no-dead-slot-mask", action="store_true",
+                    help="let dead slots route through the MoE (pre-"
+                         "router behavior; more capacity overflow)")
+    ap.add_argument("--no-prefill-buckets", action="store_true",
+                    help="exact-length prefill (one jit per distinct "
+                         "prompt length)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduce:
         cfg = reduced(cfg)
+    if args.router_policy is not None or args.capacity_factor is not None:
+        spec = router_lib.resolve_spec(cfg)
+        if args.router_policy is not None:
+            spec = spec.replace(policy=args.router_policy)
+        if args.capacity_factor is not None:
+            spec = spec.replace(capacity_factor=args.capacity_factor)
+        router_lib.get_policy(spec.policy)
+        cfg = cfg.replace(router=spec)
+        print(f"[serve] router: {spec}")
     params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
     if args.ckpt:
         mgr = CheckpointManager(args.ckpt)
@@ -65,7 +85,9 @@ def main():
     engine = ServeEngine(params, cfg, ServeConfig(
         max_len=args.prompt_len + args.new_tokens + 1,
         temperature=args.temperature, n_slots=n_slots,
-        policy=args.policy), ctx=ctx)
+        policy=args.policy,
+        mask_dead_slots=not args.no_dead_slot_mask,
+        prefill_buckets=not args.no_prefill_buckets), ctx=ctx)
     rng = np.random.RandomState(0)
     reqs = [engine.submit(rng.randint(1, cfg.vocab_size, (args.prompt_len,)),
                           args.new_tokens, arrival=i * args.stagger)
@@ -79,6 +101,11 @@ def main():
           f"policy={args.policy}, slots={n_slots}, "
           f"steps={engine.stats['decode_steps']}, "
           f"util={engine.slot_utilization:.2f})")
+    print(f"[serve] prefill compiles: {len(engine.prefill_lengths)} "
+          f"({sorted(engine.prefill_lengths)}; "
+          f"buckets={'on' if engine._can_bucket else 'off'}, "
+          f"dead-slot mask="
+          f"{'on' if engine.sc.mask_dead_slots else 'off'})")
     if engine.telemetry:
         load = np.sum([t["expert_load"] for t in engine.telemetry], axis=0)
         over = engine.stats["overflow_total"]

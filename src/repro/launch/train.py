@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.common import param as pm
 from repro.configs.base import get_config
+from repro.core import router as router_lib
 from repro.data.pipeline import DataConfig, DataIterator
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
@@ -63,6 +64,14 @@ def main():
                     choices=["ref", "pallas"],
                     help="MoE kernel backend override (docs/kernels.md); "
                          "default: the arch config's choice")
+    ap.add_argument("--router-policy", default=None,
+                    help="routing policy override (docs/routing.md): "
+                         "noisy_topk | batchwise | threshold | "
+                         "expert_choice | any registered policy")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="train capacity-factor override (RouterSpec)")
+    ap.add_argument("--eval-capacity-factor", type=float, default=None,
+                    help="eval capacity-factor override (RouterSpec)")
     ap.add_argument("--workdir", default="/tmp/repro_train")
     args = ap.parse_args()
 
@@ -71,6 +80,23 @@ def main():
         cfg = reduced(cfg)
     if args.kernel_backend is not None:
         cfg = cfg.replace(kernel_backend=args.kernel_backend)
+    # Router flags configure the spec at ONE resolution point: whatever
+    # the arch config carries (explicit spec or legacy fields) resolves to
+    # a RouterSpec here, the overrides land on it, and the spec rides
+    # cfg.router through every MoE layer (docs/routing.md).
+    if (args.router_policy is not None or args.capacity_factor is not None
+            or args.eval_capacity_factor is not None):
+        spec = router_lib.resolve_spec(cfg)
+        if args.router_policy is not None:
+            spec = spec.replace(policy=args.router_policy)
+        if args.capacity_factor is not None:
+            spec = spec.replace(capacity_factor=args.capacity_factor)
+        if args.eval_capacity_factor is not None:
+            spec = spec.replace(eval_capacity_factor=
+                                args.eval_capacity_factor)
+        router_lib.get_policy(spec.policy)   # unknown policy fails here
+        cfg = cfg.replace(router=spec)
+        print(f"[train] router: {spec}")
     params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
     print(f"[train] {cfg.name}: {pm.param_count(params)/1e6:.1f}M params "
           f"on {len(jax.devices())} device(s)")
@@ -94,7 +120,7 @@ def main():
                              checkpoint_every=args.checkpoint_every,
                              log_every=10),
         data_iter=DataIterator(dc), workdir=args.workdir,
-        kernel_backend=cfg.kernel_backend)
+        kernel_backend=cfg.kernel_backend, router=cfg.router)
     final = trainer.run()
     print(f"[train] done: {final}")
 

@@ -112,30 +112,47 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *, rng=None,
 
 
 def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
-               ctx: ctx_lib.MeshContext | None = None):
-    """Prompt ingestion. batch: tokens [B,S]. Returns (last_logits, cache)."""
+               ctx: ctx_lib.MeshContext | None = None, *,
+               last_index=None, valid=None):
+    """Prompt ingestion. batch: tokens [B,S]. Returns (last_logits, cache).
+
+    Bucketed prefill (docs/serving.md): ``last_index`` (scalar) selects
+    the logits position — the true final prompt token when the prompt was
+    right-padded to a length bucket — and ``valid`` ([B, S]) masks the
+    padded tail out of MoE routing so padding can never displace real
+    tokens from expert capacity.  Defaults reproduce the exact-length
+    path (last position, everything valid)."""
     x = _embed_with_prefix(params, batch["tokens"], cfg,
                            batch.get("prefix_embeds"))
     positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
                                  x.shape[:2])
     x, new_cache = transformer.stack_prefill(params["blocks"], x, cfg,
-                                             cache, positions, ctx=ctx)
-    x = layers.rmsnorm(params["ln_f"], x[:, -1:, :], cfg.norm_eps)
+                                             cache, positions, ctx=ctx,
+                                             valid=valid)
+    if last_index is None:
+        x = x[:, -1:, :]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     logits = logits_fn(params, x, cfg, ctx)[:, 0, :]
     return logits, new_cache
 
 
 def lm_decode(params, tokens, cache, cur_index, cfg: ModelConfig,
               ctx: ctx_lib.MeshContext | None = None, *,
-              return_telemetry: bool = False):
+              valid=None, return_telemetry: bool = False):
     """One decode step. tokens: [B] int32; cur_index: scalar int32 position
     of the *new* token, or a [B] vector of per-sequence positions (serving
-    slots of mixed age).  Returns (logits [B, V], new_cache), plus — with
-    ``return_telemetry`` — the per-expert MoE load/overflow counters summed
-    over layers (None for models without MoE)."""
+    slots of mixed age).  ``valid`` ([B] in {0,1}) is slot occupancy: dead
+    slots are masked out of MoE routing and consume no expert capacity.
+    Returns (logits [B, V], new_cache), plus — with ``return_telemetry`` —
+    the per-expert MoE load/overflow counters summed over layers (None for
+    models without MoE)."""
     x = layers.embed(params["embed"], tokens[:, None], cfg.compute_dtype)
     x, new_cache, telem = transformer.stack_decode(params["blocks"], x, cfg,
-                                                   cache, cur_index, ctx=ctx)
+                                                   cache, cur_index, ctx=ctx,
+                                                   valid=valid)
     x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     logits = logits_fn(params, x, cfg, ctx)[:, 0, :]
     if return_telemetry:

@@ -39,8 +39,11 @@ class PaperLMConfig:
     k: int = 4                      # paper: k=4 flat, k=2 per level (hier.)
     expert_hidden: int = 1024
     hierarchical: tuple[int, int] | None = None
+    # One routing configuration path (docs/routing.md); None resolves the
+    # deprecated fields below into a RouterSpec (k inherited from ``k``).
+    router: Any = None              # RouterSpec | None
     gating_mode: str = "noisy_topk"
-    capacity_factor: float = 2.0
+    capacity_factor: float = 2.0    # §C.1 paper value == RouterSpec default
     w_importance: float = 0.1       # §C.1
     w_load: float = 0.1
     dropout: float = 0.1
@@ -53,8 +56,8 @@ def _moe_args(cfg: PaperLMConfig) -> moe_lib.MoEArgs:
     return moe_lib.MoEArgs(
         n_experts=cfg.n_experts, k=cfg.k, d_model=cfg.d_model,
         d_ff=cfg.expert_hidden, activation="relu",
+        router=cfg.router,
         gating_mode=cfg.gating_mode, capacity_factor=cfg.capacity_factor,
-        eval_capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
         sigmoid_output=True, kernel_backend=cfg.kernel_backend,
         dtype=cfg.dtype)
@@ -65,8 +68,9 @@ def _hmoe_args(cfg: PaperLMConfig) -> hmoe_lib.HMoEArgs:
     return hmoe_lib.HMoEArgs(
         n_groups=a, n_experts_per_group=b, k_primary=2, k_secondary=2,
         d_model=cfg.d_model, d_ff=cfg.expert_hidden, activation="relu",
-        capacity_factor=cfg.capacity_factor,
-        w_importance=cfg.w_importance, w_load=cfg.w_load, dtype=cfg.dtype)
+        router=cfg.router, capacity_factor=cfg.capacity_factor,
+        w_importance=cfg.w_importance, w_load=cfg.w_load,
+        kernel_backend=cfg.kernel_backend, dtype=cfg.dtype)
 
 
 def paper_lm_defs(cfg: PaperLMConfig) -> dict:

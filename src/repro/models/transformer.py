@@ -27,8 +27,8 @@ def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
     return moe_lib.MoEArgs(
         n_experts=cfg.n_experts, k=cfg.moe_k, d_model=cfg.d_model,
         d_ff=cfg.moe_d_ff, activation=cfg.activation,
+        router=cfg.router,
         gating_mode=cfg.gating_mode, capacity_factor=cfg.capacity_factor,
-        eval_capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
         dispatch_impl=cfg.dispatch_impl, expert_impl=cfg.expert_impl,
         kernel_backend=cfg.kernel_backend,
@@ -41,7 +41,8 @@ def _hmoe_args(cfg: ModelConfig) -> hmoe.HMoEArgs:
     return hmoe.HMoEArgs(
         n_groups=a, n_experts_per_group=b, k_primary=cfg.moe_k,
         k_secondary=cfg.moe_k, d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
-        activation=cfg.activation, capacity_factor=cfg.capacity_factor,
+        activation=cfg.activation, router=cfg.router,
+        capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
         kernel_backend=cfg.kernel_backend, dispatch_impl=cfg.dispatch_impl,
         dispatch_vmem_limit=cfg.dispatch_vmem_limit, dtype=cfg.param_dtype)
@@ -126,8 +127,12 @@ def _add_telemetry(acc, aux):
 
 
 def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
-               ctx: ctx_lib.MeshContext | None = None):
-    """Post-mixer FFN with residual. x: [B, S, d]."""
+               ctx: ctx_lib.MeshContext | None = None, valid=None):
+    """Post-mixer FFN with residual. x: [B, S, d].
+
+    ``valid`` ([B] or [B, S] in {0,1}) is the router's token-validity
+    mask: masked tokens (dead serving slots, bucketed-prefill padding)
+    neither route nor consume MoE expert capacity."""
     if kind.ffn == "none":
         return x, None
     h = layers.rmsnorm(params["ln2"], x, cfg.norm_eps)
@@ -136,12 +141,20 @@ def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
     if kind.ffn in ("moe", "moe+dense"):
         b, s, d = h.shape
         flat = h.reshape(b * s, d)
+        mask = None
+        if valid is not None:
+            mask = jnp.broadcast_to(
+                jnp.asarray(valid, jnp.float32).reshape(
+                    (b, -1) if jnp.ndim(valid) > 1 else (b, 1)),
+                (b, s)).reshape(b * s)
         if cfg.moe_hierarchical:
             y, aux = hmoe.hmoe_apply(params["moe"], flat, _hmoe_args(cfg),
-                                     train=train, rng=rng, ctx=ctx)
+                                     train=train, rng=rng, ctx=ctx,
+                                     mask=mask)
         else:
             y, aux = moe_lib.moe_apply(params["moe"], flat, _moe_args(cfg),
-                                       train=train, rng=rng, ctx=ctx)
+                                       train=train, rng=rng, ctx=ctx,
+                                       mask=mask)
         out = out + y.reshape(b, s, d)
     if kind.ffn in ("dense", "moe+dense"):
         out = out + layers.mlp(params["mlp"], h, cfg.activation, ctx=ctx)
@@ -169,8 +182,9 @@ def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
 
 def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
                   positions,
-                  ctx: ctx_lib.MeshContext | None = None):
-    """Prefill block: causal attention + cache fill. Returns (x, cache)."""
+                  ctx: ctx_lib.MeshContext | None = None, valid=None):
+    """Prefill block: causal attention + cache fill. Returns (x, cache).
+    ``valid`` ([B, S]) keeps bucketed-prefill padding out of MoE routing."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
         window = cfg.sliding_window if kind.mixer == "attn_local" else 0
@@ -182,15 +196,17 @@ def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
         y, new_cache = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state,
                                  return_state=True, ctx=ctx)
     x = x + y
-    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx)
+    x, _ = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx,
+                      valid=valid)
     return x, new_cache
 
 
 def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
                  cur_index,
-                 ctx: ctx_lib.MeshContext | None = None):
+                 ctx: ctx_lib.MeshContext | None = None, valid=None):
     """One-token decode block. ``cur_index`` is a scalar or a [B] vector of
-    per-sequence positions (mixed-age serving slots).
+    per-sequence positions (mixed-age serving slots).  ``valid`` ([B]) is
+    slot occupancy — dead slots route nowhere and consume no capacity.
     Returns (x, new_cache, aux)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
@@ -202,7 +218,8 @@ def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
         y, new_cache = ssm.mamba_decode(params["mamba"], h, cache,
                                         d_state=cfg.ssm_d_state)
     x = x + y
-    x, aux = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx)
+    x, aux = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx,
+                        valid=valid)
     return x, new_cache, aux
 
 
@@ -297,8 +314,10 @@ def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
-                  ctx: ctx_lib.MeshContext | None = None):
-    """Prefill all layers, filling the cache. Returns (x, new_cache)."""
+                  ctx: ctx_lib.MeshContext | None = None, valid=None):
+    """Prefill all layers, filling the cache. Returns (x, new_cache).
+    ``valid`` ([B, S]) masks padded prompt positions out of MoE routing
+    (bucketed prefill)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
     new_cache: dict = {}
@@ -309,7 +328,7 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
         for p in range(cfg.period):
             x, out_cache[f"pos{p}"] = block_prefill(
                 period_params[f"pos{p}"], x, kinds[p], cfg,
-                period_cache[f"pos{p}"], positions, ctx=ctx)
+                period_cache[f"pos{p}"], positions, ctx=ctx, valid=valid)
         return x, out_cache
 
     body = jax.checkpoint(period_body) if cfg.remat else period_body
@@ -321,16 +340,17 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
         for p in range(rem):
             x, new_cache["tail"][f"pos{p}"] = block_prefill(
                 params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
-                cache["tail"][f"pos{p}"], positions, ctx=ctx)
+                cache["tail"][f"pos{p}"], positions, ctx=ctx, valid=valid)
     return x, new_cache
 
 
 def stack_decode(params, x, cfg: ModelConfig, cache, cur_index,
-                 ctx: ctx_lib.MeshContext | None = None):
+                 ctx: ctx_lib.MeshContext | None = None, valid=None):
     """One-token decode through all layers.  ``cur_index`` is a scalar or a
-    [B] vector of per-sequence positions.  Returns (x, new_cache,
-    telemetry) where telemetry is the summed per-expert load/overflow
-    counters over MoE layers (None if the model has none)."""
+    [B] vector of per-sequence positions; ``valid`` ([B]) is slot
+    occupancy (dead slots are masked out of MoE routing).  Returns
+    (x, new_cache, telemetry) where telemetry is the summed per-expert
+    load/overflow counters over MoE layers (None if the model has none)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
     new_cache: dict = {}
@@ -343,7 +363,7 @@ def stack_decode(params, x, cfg: ModelConfig, cache, cur_index,
         for p in range(cfg.period):
             x, out_cache[f"pos{p}"], aux = block_decode(
                 period_params[f"pos{p}"], x, kinds[p], cfg,
-                period_cache[f"pos{p}"], cur_index, ctx=ctx)
+                period_cache[f"pos{p}"], cur_index, ctx=ctx, valid=valid)
             telem = _add_telemetry(telem, aux)
         return (x, telem), out_cache
 
@@ -355,6 +375,6 @@ def stack_decode(params, x, cfg: ModelConfig, cache, cur_index,
         for p in range(rem):
             x, new_cache["tail"][f"pos{p}"], aux = block_decode(
                 params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
-                cache["tail"][f"pos{p}"], cur_index, ctx=ctx)
+                cache["tail"][f"pos{p}"], cur_index, ctx=ctx, valid=valid)
             telem = _add_telemetry(telem, aux)
     return x, new_cache, telem

@@ -62,6 +62,24 @@ class ServeConfig:
     policy: str = "continuous"   # "continuous" | "static" (drain baseline)
     prefill_plan: str = "prefill_tp"
     decode_plan: str = "decode_std"
+    # Dead-slot masking: pass slot occupancy into routing (the router's
+    # token-validity mask) so empty pool slots neither route through the
+    # MoE nor consume expert capacity — observable as lower capacity-
+    # overflow telemetry under partial occupancy.
+    mask_dead_slots: bool = True
+    # Bucketed prefill: right-pad prompts to power-of-two length buckets
+    # so jit compiles once per bucket instead of once per distinct prompt
+    # length.  Padded positions are masked out of MoE routing and their
+    # garbage KV is never attended (causal mask + sequential overwrite),
+    # so outputs stay bit-identical to exact-length prefill while prefill
+    # routing does not overflow at the exact length (capacity is sized
+    # from the padded count, so padding only ever ADDS slots; under a
+    # factor tight enough to drop prompt tokens the two runs keep
+    # different assignments — docs/serving.md).  Disabled automatically
+    # for ssm/hybrid (stateful scan) and sliding-window models
+    # (ring-buffer caches would retain padded positions).
+    prefill_buckets: bool = True
+    min_bucket: int = 8          # smallest prefill bucket length
 
 
 class ServeEngine:
@@ -76,13 +94,23 @@ class ServeEngine:
                            else self.ctx)
         self.prefill_ctx = (self.ctx.with_plan(sc.prefill_plan) if on_mesh
                             else self.ctx)
+        # Bucketed prefill is only sound when a padded tail can neither
+        # leak into recurrent state (ssm/hybrid mixers scan sequentially)
+        # nor linger in a ring-buffer KV cache (sliding-window layers).
+        from repro.configs.base import layer_kinds
+        self._can_bucket = (sc.prefill_buckets
+                            and not cfg.sliding_window
+                            and all(k.mixer != "mamba"
+                                    for k in layer_kinds(cfg)))
         self._prefill = jax.jit(
-            lambda p, b, c: lm.lm_prefill(p, b, c, cfg,
-                                          ctx=self.prefill_ctx))
+            lambda p, b, c, li, v: lm.lm_prefill(p, b, c, cfg,
+                                                 ctx=self.prefill_ctx,
+                                                 last_index=li, valid=v))
         self._decode = jax.jit(
-            lambda p, t, c, i: lm.lm_decode(p, t, c, i, cfg,
-                                            ctx=self.decode_ctx,
-                                            return_telemetry=True))
+            lambda p, t, c, i, v: lm.lm_decode(p, t, c, i, cfg,
+                                               ctx=self.decode_ctx,
+                                               valid=v,
+                                               return_telemetry=True))
         self._argmax = jax.jit(lambda l: jnp.argmax(l, axis=-1)
                                .astype(jnp.int32))
         if sc.temperature > 0.0:
@@ -107,6 +135,7 @@ class ServeEngine:
         self.sched = Scheduler(self.sc.n_slots, policy=self.sc.policy)
         self.step_count = 0
         self.telemetry: list[dict] = []
+        self.prefill_lengths: set[int] = set()   # distinct compiled shapes
         self.stats = {"prefills": 0, "decode_steps": 0, "reshards": 0,
                       "generated_tokens": 0, "slot_steps_active": 0,
                       "slot_steps_total": 0, "overflow_total": 0.0}
@@ -160,11 +189,38 @@ class ServeEngine:
             self.sched.retire(slot)
             self.kv.release(slot)
 
+    def _bucket_len(self, plen: int) -> int:
+        """Power-of-two length bucket for a prompt (clamped to the page)."""
+        if not self._can_bucket:
+            return plen
+        b = max(self.sc.min_bucket, 1)
+        while b < plen:
+            b *= 2
+        return min(b, self.sc.max_len)
+
     def _start(self, slot: int, req: Request) -> None:
-        """Prefill a newly admitted request and seed its slot."""
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        """Prefill a newly admitted request and seed its slot.
+
+        Prompts are right-padded to a power-of-two bucket (one jit compile
+        per *bucket* instead of per distinct prompt length); the padded
+        tail is masked out of MoE routing (router token-validity mask) and
+        its KV is causally invisible at the logits position and
+        overwritten slot-by-slot as decode proceeds, so bucketing is
+        bit-identical to exact-length prefill as long as prefill routing
+        does not overflow at the exact length (padding only adds
+        capacity; see docs/serving.md)."""
+        plen = req.prompt_len
+        blen = self._bucket_len(plen)
+        padded = np.zeros((blen,), np.int32)
+        padded[:plen] = req.prompt
+        valid = np.zeros((1, blen), np.float32)
+        valid[0, :plen] = 1.0
+        self.prefill_lengths.add(blen)
+        tokens = jnp.asarray(padded, jnp.int32)[None, :]
         logits, page = self._prefill(self.params, {"tokens": tokens},
-                                     self._blank_page)
+                                     self._blank_page,
+                                     jnp.asarray(plen - 1, jnp.int32),
+                                     jnp.asarray(valid))
         if self.ctx.mesh is not None:
             # prefill_tp -> decode_std boundary: explicit reshard of the
             # page onto the decode plan before it joins the slot pool.
@@ -185,15 +241,21 @@ class ServeEngine:
             n = self.sc.n_slots
             toks = np.zeros((n,), np.int32)
             pos = np.zeros((n,), np.int32)
+            occ = np.zeros((n,), np.float32)
             rows: list[Request | None] = [None] * n
             for slot, req in active:
                 toks[slot] = req.tokens[-1]
                 # position of the token being fed (the one just sampled).
                 pos[slot] = req.prompt_len + len(req.tokens) - 1
+                occ[slot] = 1.0
                 rows[slot] = req
+            # Slot-occupancy mask: dead slots are masked out of MoE
+            # routing so they stop consuming expert capacity (ROADMAP).
+            if not self.sc.mask_dead_slots:
+                occ[:] = 1.0
             logits, self.kv.cache, telem = self._decode(
                 self.params, jnp.asarray(toks), self.kv.cache,
-                jnp.asarray(pos))
+                jnp.asarray(pos), jnp.asarray(occ))
             nxt = self._sample_rows(logits, rows)
             self._record_telemetry(telem, len(active))
             self.stats["decode_steps"] += 1

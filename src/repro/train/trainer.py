@@ -107,7 +107,8 @@ class Trainer:
                  loop: TrainLoopConfig, data_iter, workdir: str,
                  jit: bool = True, crash_at_step: int | None = None,
                  ctx: ctx_lib.MeshContext | None = None,
-                 kernel_backend: str | None = None):
+                 kernel_backend: str | None = None,
+                 router=None):
         # The sharding context is entered around step tracing so loss
         # closures that consult current_ctx() (instead of binding ctx
         # explicitly) still resolve the right mesh/plan.
@@ -123,6 +124,15 @@ class Trainer:
             backend_lib.get(kernel_backend)
             print(f"[trainer] kernel backend {kernel_backend!r} validated "
                   "(active backend is set by the model config)")
+        # Same fail-fast validation for the RouterSpec the model config is
+        # expected to route with: an unknown policy raises RouterError at
+        # construction, not mid-trace (docs/routing.md).
+        self.router = router
+        if router is not None:
+            from repro.core import router as router_lib
+            router_lib.get_policy(router.policy)
+            print(f"[trainer] router policy {router.policy!r} validated "
+                  "(active spec is set by the model config)")
         self.loop = loop
         self.data_iter = data_iter
         self.workdir = workdir

@@ -247,23 +247,119 @@ def test_generate_compat_pads_after_eos(moe_setup):
 # ---------------------------------------------------------------------------
 
 def test_decode_telemetry_accounts_for_active_tokens(moe_setup):
+    """With dead-slot masking (the default) only *active* slots route —
+    the per-step expert_load total is active·k·layers; with masking off
+    (the pre-router baseline) every pool slot routes and the total is
+    n_slots·k·layers."""
     cfg, params = moe_setup
+    n_moe_layers = cfg.n_layers          # kimi family: MoE in every layer
     eng = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=3))
     for p, m, a in _trace_prompts(cfg.vocab_size):
         eng.submit(p, m, arrival=a)
     eng.run()
     assert len(eng.telemetry) == eng.stats["decode_steps"]
-    n_moe_layers = cfg.n_layers          # kimi family: MoE in every layer
     for entry in eng.telemetry:
         assert entry["expert_load"].shape == (cfg.n_experts,)
-        # every active token is routed to k experts in every MoE layer
-        # (dead slots also route — they are part of the pool's capacity
-        # pressure and must be observable, but here pool == active+dead
-        # and the counters cover the whole batch):
+        # every active token routes to k experts in every MoE layer; dead
+        # slots are masked out of routing entirely (zero load)
         total = entry["expert_load"].sum()
-        assert total == eng.sc.n_slots * cfg.moe_k * n_moe_layers
+        assert total == entry["active"] * cfg.moe_k * n_moe_layers
         assert (entry["overflow"] >= 0).all()
     assert np.isfinite(eng.stats["overflow_total"])
+
+    unmasked = ServeEngine(params, cfg, ServeConfig(
+        max_len=64, n_slots=3, mask_dead_slots=False))
+    for p, m, a in _trace_prompts(cfg.vocab_size):
+        unmasked.submit(p, m, arrival=a)
+    unmasked.run()
+    for entry in unmasked.telemetry:
+        assert entry["expert_load"].sum() \
+            == unmasked.sc.n_slots * cfg.moe_k * n_moe_layers
+
+
+def test_dead_slot_masking_bit_identical_and_reduces_overflow(moe_setup):
+    """ROADMAP serving item: dead slots are masked out of routing.  Under
+    partial occupancy with tight expert capacity the masked engine (a)
+    stays bit-identical to sequential greedy generation — active tokens
+    are never displaced by dead-slot traffic — and (b) records strictly
+    less capacity overflow than the unmasked baseline, where the dead
+    slots' identical pad-token embeddings pile onto the same experts."""
+    from repro.core.router import RouterSpec
+    cfg, params = moe_setup
+    tight = cfg.replace(router=RouterSpec(capacity_factor=0.5,
+                                          capacity_multiple=1))
+    # Sparse arrivals: at most 2 of the 8 slots are ever active, so the
+    # decode capacity (ceil(k·8·0.5/E) = 2 slots/expert) always fits the
+    # *active* tokens — but not the 6 dead slots, whose identical pad
+    # embeddings all route to the same k experts when unmasked.
+    rs = np.random.RandomState(11)
+    specs = [(rs.randint(1, cfg.vocab_size, (8,)).astype(np.int32), 4,
+              i * 3) for i in range(4)]
+
+    masked = ServeEngine(params, tight, ServeConfig(max_len=64, n_slots=8))
+    reqs = [masked.submit(p, m, arrival=a) for p, m, a in specs]
+    masked.run()
+    assert all(r.done for r in reqs)
+
+    oracle = ServeEngine(params, tight, ServeConfig(max_len=64, n_slots=1))
+    for req, (p, m, _) in zip(reqs, specs):
+        oracle.reset()
+        ref = oracle.submit(p, m)
+        oracle.run()
+        assert ref.tokens == req.tokens, \
+            f"req {req.rid}: {ref.tokens} != {req.tokens}"
+
+    unmasked = ServeEngine(params, tight, ServeConfig(
+        max_len=64, n_slots=8, mask_dead_slots=False))
+    for p, m, a in specs:
+        unmasked.submit(p, m, arrival=a)
+    unmasked.run()
+    assert unmasked.stats["overflow_total"] > masked.stats["overflow_total"]
+
+
+# ---------------------------------------------------------------------------
+# bucketed prefill: power-of-two buckets, bit-identical to exact-length
+# ---------------------------------------------------------------------------
+
+def test_bucketed_prefill_bit_identical_fewer_compiles(moe_setup):
+    """Prompts pad to power-of-two buckets (one jit per bucket, not per
+    distinct length); the padded tail is masked out of MoE routing and
+    causally invisible, so greedy outputs are bit-identical to the
+    exact-length engine."""
+    cfg, params = moe_setup
+    rs = np.random.RandomState(7)
+    # 6 distinct prompt lengths -> 2 buckets (8 and 16)
+    specs = [(rs.randint(1, cfg.vocab_size, (l,)).astype(np.int32), m, a)
+             for l, m, a in [(5, 4, 0), (7, 5, 0), (9, 4, 1), (11, 6, 2),
+                             (13, 3, 3), (16, 4, 4)]]
+
+    bucketed = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=3))
+    exact = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=3,
+                                                 prefill_buckets=False))
+    rb = [bucketed.submit(p, m, arrival=a) for p, m, a in specs]
+    re_ = [exact.submit(p, m, arrival=a) for p, m, a in specs]
+    bucketed.run()
+    exact.run()
+    for b, e in zip(rb, re_):
+        assert b.tokens == e.tokens, (b.rid, b.tokens, e.tokens)
+    assert bucketed.prefill_lengths == {8, 16}
+    assert exact.prefill_lengths == {5, 7, 9, 11, 13, 16}
+    assert len(bucketed.prefill_lengths) < len(exact.prefill_lengths)
+
+
+def test_bucketing_disabled_for_stateful_mixers():
+    """ssm/hybrid scans and sliding-window ring buffers would absorb the
+    padded tail — the engine must fall back to exact-length prefill."""
+    from repro.configs.base import get_config
+    cfg = get_config("falcon-mamba-7b").replace(
+        n_layers=2, d_model=32, vocab_size=64, ssm_d_state=4,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=32, n_slots=2))
+    assert not eng._can_bucket
+    eng.submit(np.arange(1, 6, dtype=np.int32), 3)   # length-5 prompt
+    eng.run()
+    assert eng.prefill_lengths == {5}                # exact, not bucketed
 
 
 def test_dense_model_has_no_telemetry():
@@ -324,7 +420,9 @@ def test_prefill_decode_reshard_8device_mesh():
         prompt = jnp.asarray(
             np.random.RandomState(0).randint(1, 64, (1, 16)), jnp.int32)
         page = pm.materialize(eng.kv.seq_defs, jax.random.PRNGKey(0))
-        _, page = eng._prefill(params, {"tokens": prompt}, page)
+        _, page = eng._prefill(params, {"tokens": prompt}, page,
+                               jnp.asarray(15, jnp.int32),
+                               jnp.ones((1, 16), jnp.float32))
         page = eng.decode_ctx.reshard(page, eng.kv.seq_defs)
         expected = eng.decode_ctx.tree_shardings(eng.kv.seq_defs)
         n_model_sharded = 0
