@@ -18,9 +18,12 @@ test-kernels:
 		tests/test_kernel_grads.py tests/test_kernel_backend.py
 
 # Continuous-batching serving suite (part of tier-1; this target runs
-# just it: scheduler/slot-pool semantics, sequential parity, reshard).
+# just it: scheduler/slot-pool + admission/budget invariants, the
+# policy x backend x chunked parity matrix, reshard).  The matrix's
+# slowest cells (pallas, 8-device) are auto-marked slow by the conftest
+# guard; `make test-slow` runs them.
 test-serve:
-	$(PY) -m pytest -q tests/test_serve.py
+	$(PY) -m pytest -q tests/test_serve.py tests/test_serve_sched.py
 
 # Router API suite (part of tier-1): RouterSpec/registry semantics, the
 # deprecation shim, policy parity (noisy_topk/expert_choice), masking.

@@ -95,12 +95,27 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
     out = out.reshape(a.n_experts, capacity, d)
 
     y = bk.combine(out, p, a, dtype=x_local.dtype)
-    aux_loss = dec.aux_loss
     # Balance statistics are over the *global* batch: psum the raw vectors.
     axes = (ep_axis,) if fsdp_axis is None else (ep_axis, fsdp_axis)
     imp = jax.lax.psum(losses.importance(info.gates), axes)
     load = jax.lax.psum(info.load, axes)
-    aux_loss = jax.lax.pmean(aux_loss, axes)
+    # Combined-batch balancing losses (paper §3.1/§4: every expert serves
+    # one combined batch, so Importance(X)/Load(X) in Eqs. (6)/(11) sum
+    # over *all* data-parallel shards).  The router computed shard-local
+    # losses; re-derive CV² from the psum'd global vectors and keep only
+    # the policy's extra term (e.g. Appendix-F threshold alignment) from
+    # the local value — pmean of per-shard CVs is NOT the global CV (each
+    # shard routing all its tokens to a different single expert is
+    # maximally skewed locally yet perfectly balanced globally; for
+    # expert_choice the shard-local load is capacity-uniform by
+    # construction, so only the global view can see imbalance at all).
+    spec = router.spec
+    local_balance = (losses.importance_loss(info.gates, spec.w_importance)
+                     + losses.load_loss(info.load, spec.w_load))
+    extra = dec.aux_loss - local_balance      # exact: same fp recompute
+    aux_loss = (spec.w_importance * losses.cv_squared(imp)
+                + spec.w_load * losses.cv_squared(load)
+                + jax.lax.pmean(extra, axes))
     metrics = {
         "cv_importance": jnp.sqrt(losses.cv_squared(imp)),
         "cv_load": jnp.sqrt(losses.cv_squared(load)),

@@ -54,6 +54,19 @@ def main():
     ap.add_argument("--no-prefill-buckets", action="store_true",
                     help="exact-length prefill (one jit per distinct "
                          "prompt length)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: ingest prompts longer than "
+                         "this many tokens as a sequence of chunk "
+                         "work-items interleaved with decode steps "
+                         "(0 = whole-prompt prefill)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prompt tokens of prefill per engine step "
+                         "(0 = unlimited)")
+    ap.add_argument("--admission", choices=("fcfs", "aware"),
+                    default="fcfs",
+                    help="aware = prompt-length-aware: skip queued "
+                         "requests whose next chunk does not fit the "
+                         "step's remaining prefill budget")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -82,12 +95,20 @@ def main():
     else:
         ctx = ctx_lib.MeshContext.null(plan="decode_std")
     n_slots = args.slots or min(args.requests, 8)
+    max_len = args.prompt_len + args.new_tokens + 1
+    if args.prefill_chunk > 0:
+        # chunk writes land in [start, start + chunk) windows: size the
+        # page to a chunk multiple so the final padded window fits.
+        max_len = -(-max_len // args.prefill_chunk) * args.prefill_chunk
     engine = ServeEngine(params, cfg, ServeConfig(
-        max_len=args.prompt_len + args.new_tokens + 1,
+        max_len=max_len,
         temperature=args.temperature, n_slots=n_slots,
         policy=args.policy,
         mask_dead_slots=not args.no_dead_slot_mask,
-        prefill_buckets=not args.no_prefill_buckets), ctx=ctx)
+        prefill_buckets=not args.no_prefill_buckets,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget,
+        admission=args.admission), ctx=ctx)
     rng = np.random.RandomState(0)
     reqs = [engine.submit(rng.randint(1, cfg.vocab_size, (args.prompt_len,)),
                           args.new_tokens, arrival=i * args.stagger)
@@ -106,6 +127,12 @@ def main():
           f"buckets={'on' if engine._can_bucket else 'off'}, "
           f"dead-slot mask="
           f"{'on' if engine.sc.mask_dead_slots else 'off'})")
+    if engine._chunk:
+        print(f"[serve] chunked prefill: chunk={engine._chunk}, "
+              f"budget={engine.sc.prefill_budget or 'unlimited'}, "
+              f"admission={engine.sc.admission}, "
+              f"chunks={engine.stats['prefill_chunks']}, "
+              f"offsets={sorted(engine.chunk_offsets)}")
     if engine.telemetry:
         load = np.sum([t["expert_load"] for t in engine.telemetry], axis=0)
         over = engine.stats["overflow_total"]

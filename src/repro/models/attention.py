@@ -96,11 +96,17 @@ def _mask(pos_q, pos_k, causal, window):
 
 def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
                         q_block: int = 512, kv_block: int = 512,
-                        kv_len: jax.Array | None = None):
+                        kv_len: jax.Array | None = None,
+                        q_offset: int = 0):
     """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] -> [B,Sq,H,hd].
 
     Assumes q position i attends kv positions <= i (+ window lower bound).
-    ``kv_len`` optionally masks a padded cache tail.
+    ``kv_len`` optionally masks a padded cache tail.  ``q_offset`` (a
+    *static* int) places the queries at absolute positions
+    ``q_offset + i`` against kv positions ``0..Skv`` — chunked prefill
+    resumes a prompt mid-sequence with the cached prefix as kv context
+    while the static per-block kv ranges keep pruning above the shifted
+    diagonal.
     """
     b, sq, h, hd = q.shape
     skv, kv_heads = k.shape[1], k.shape[2]
@@ -124,12 +130,13 @@ def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
         # reverse-mode differentiable.
         q_i = jax.lax.slice_in_dim(qr, i * q_block, (i + 1) * q_block,
                                    axis=3)
-        pos_q = i * q_block + jnp.arange(q_block)
+        pos_q = q_offset + i * q_block + jnp.arange(q_block)
         if causal:
-            hi = min(nkv, (i * q_block + q_block + kv_block - 1) // kv_block)
+            hi = min(nkv, (q_offset + i * q_block + q_block + kv_block - 1)
+                     // kv_block)
         else:
             hi = nkv
-        lo = max(0, (i * q_block + 1 - window) // kv_block) \
+        lo = max(0, (q_offset + i * q_block + 1 - window) // kv_block) \
             if window > 0 else 0
 
         def kv_step(carry, j):
@@ -377,20 +384,53 @@ def attention(params, x, positions, *, rope_theta: float, qk_norm: bool,
 
 def prefill_attention(params, x, positions, *, rope_theta: float,
                       qk_norm: bool, cache: dict, window: int = 0,
-                      q_block: int = 512, kv_block: int = 512):
+                      q_block: int = 512, kv_block: int = 512,
+                      offset: int | None = None):
     """Prefill: causal attention that also fills the KV cache.
 
     Returns (y, new_cache).  Full caches take K/V at positions [0, S);
     ring-buffer (windowed) caches take the last ``window`` positions at
     their ``pos % window`` slots.
+
+    ``offset`` (a *static* int) switches to chunked-prefill mode: the S
+    tokens are the prompt slice at positions [offset, offset + S), their
+    K/V is written into the cache at that range, and attention runs
+    against the cached prefix [0, offset) concatenated with the chunk —
+    so chunk N resumes exactly where chunk N-1's cache write ended.
+    Sliding-window layers are unsupported (their ring buffers make the
+    prefix slice ambiguous); the engine refuses chunking for them.
     """
     q, k, v = _qkv(params, x, positions, rope_theta=rope_theta,
                    qk_norm=qk_norm)
-    o = blockwise_attention(q, k, v, causal=True, window=window,
-                            q_block=q_block, kv_block=kv_block)
     s = x.shape[1]
     length = cache["k"].shape[1]
     kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if offset is not None:
+        assert window == 0, \
+            "chunked prefill is unsupported for sliding-window layers"
+        off = int(offset)
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, off,
+                                                    axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, off,
+                                                    axis=1)
+        # Attend over [cached prefix, this chunk]: the prefix holds the
+        # previous chunks' K/V (cast back to compute dtype), the shifted
+        # causal mask keeps each row at its absolute position.
+        k_ctx = jnp.concatenate(
+            [jax.lax.slice_in_dim(cache["k"], 0, off, axis=1)
+             .astype(k.dtype), k], axis=1)
+        v_ctx = jnp.concatenate(
+            [jax.lax.slice_in_dim(cache["v"], 0, off, axis=1)
+             .astype(v.dtype), v], axis=1)
+        o = blockwise_attention(q, k_ctx, v_ctx, causal=True, window=0,
+                                q_block=q_block, kv_block=kv_block,
+                                q_offset=off)
+        dt = x.dtype
+        y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(dt),
+                       preferred_element_type=jnp.float32).astype(dt)
+        return y, {"k": new_k, "v": new_v}
+    o = blockwise_attention(q, k, v, causal=True, window=window,
+                            q_block=q_block, kv_block=kv_block)
     if window > 0 and s >= length:
         tail = jnp.arange(s - length, s)
         slots = tail % length

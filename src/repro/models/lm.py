@@ -113,7 +113,7 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *, rng=None,
 
 def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
                ctx: ctx_lib.MeshContext | None = None, *,
-               last_index=None, valid=None):
+               last_index=None, valid=None, start_pos: int | None = None):
     """Prompt ingestion. batch: tokens [B,S]. Returns (last_logits, cache).
 
     Bucketed prefill (docs/serving.md): ``last_index`` (scalar) selects
@@ -121,14 +121,21 @@ def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
     right-padded to a length bucket — and ``valid`` ([B, S]) masks the
     padded tail out of MoE routing so padding can never displace real
     tokens from expert capacity.  Defaults reproduce the exact-length
-    path (last position, everything valid)."""
+    path (last position, everything valid).
+
+    Chunked prefill: ``start_pos`` (a *static* int) ingests the prompt
+    slice at absolute positions [start_pos, start_pos + S) against a
+    cache already holding positions [0, start_pos) — chunk N resumes
+    where chunk N-1 ended (RoPE, KV writes, and the causal mask all use
+    the absolute positions).  ``last_index`` stays chunk-local."""
     x = _embed_with_prefix(params, batch["tokens"], cfg,
                            batch.get("prefix_embeds"))
-    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
-                                 x.shape[:2])
+    positions = jnp.broadcast_to(
+        (start_pos or 0) + jnp.arange(x.shape[1])[None, :], x.shape[:2])
     x, new_cache = transformer.stack_prefill(params["blocks"], x, cfg,
                                              cache, positions, ctx=ctx,
-                                             valid=valid)
+                                             valid=valid,
+                                             start_pos=start_pos)
     if last_index is None:
         x = x[:, -1:, :]
     else:

@@ -182,17 +182,25 @@ def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
 
 def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
                   positions,
-                  ctx: ctx_lib.MeshContext | None = None, valid=None):
+                  ctx: ctx_lib.MeshContext | None = None, valid=None,
+                  start_pos: int | None = None):
     """Prefill block: causal attention + cache fill. Returns (x, cache).
-    ``valid`` ([B, S]) keeps bucketed-prefill padding out of MoE routing."""
+    ``valid`` ([B, S]) keeps bucketed-prefill padding out of MoE routing.
+    ``start_pos`` (static int) runs the block in chunked-prefill mode:
+    K/V land at cache positions [start_pos, start_pos + S) and attention
+    resumes against the cached prefix (attention mixers only — ssm state
+    scans cannot resume from a cache page)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if kind.mixer in ("attn", "attn_local"):
         window = cfg.sliding_window if kind.mixer == "attn_local" else 0
         y, new_cache = attention.prefill_attention(
             params["attn"], h, positions, rope_theta=cfg.rope_theta,
             qk_norm=cfg.qk_norm, cache=cache, window=window,
-            q_block=cfg.q_block, kv_block=cfg.kv_block)
+            q_block=cfg.q_block, kv_block=cfg.kv_block, offset=start_pos)
     else:
+        assert start_pos is None, \
+            "chunked prefill requires attention mixers (ssm/hybrid state " \
+            "scans cannot resume mid-prompt from a cache page)"
         y, new_cache = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state,
                                  return_state=True, ctx=ctx)
     x = x + y
@@ -314,10 +322,13 @@ def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 
 def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
-                  ctx: ctx_lib.MeshContext | None = None, valid=None):
+                  ctx: ctx_lib.MeshContext | None = None, valid=None,
+                  start_pos: int | None = None):
     """Prefill all layers, filling the cache. Returns (x, new_cache).
     ``valid`` ([B, S]) masks padded prompt positions out of MoE routing
-    (bucketed prefill)."""
+    (bucketed prefill).  ``start_pos`` (static int) is the chunked-prefill
+    offset: this call ingests prompt positions [start_pos, start_pos + S)
+    against a cache already holding [0, start_pos)."""
     kinds = layer_kinds(cfg)
     full, rem = n_periods(cfg)
     new_cache: dict = {}
@@ -328,7 +339,8 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
         for p in range(cfg.period):
             x, out_cache[f"pos{p}"] = block_prefill(
                 period_params[f"pos{p}"], x, kinds[p], cfg,
-                period_cache[f"pos{p}"], positions, ctx=ctx, valid=valid)
+                period_cache[f"pos{p}"], positions, ctx=ctx, valid=valid,
+                start_pos=start_pos)
         return x, out_cache
 
     body = jax.checkpoint(period_body) if cfg.remat else period_body
@@ -340,7 +352,8 @@ def stack_prefill(params, x, cfg: ModelConfig, cache, positions,
         for p in range(rem):
             x, new_cache["tail"][f"pos{p}"] = block_prefill(
                 params["tail"][f"pos{p}"], x, kinds[p % cfg.period], cfg,
-                cache["tail"][f"pos{p}"], positions, ctx=ctx, valid=valid)
+                cache["tail"][f"pos{p}"], positions, ctx=ctx, valid=valid,
+                start_pos=start_pos)
     return x, new_cache
 
 

@@ -2,7 +2,8 @@
 
 The engine owns ``n_slots`` sequence slots and runs a step loop of
 
-    schedule -> (prefill newly admitted requests) -> fused decode step
+    schedule (admission + chunk planning under the prefill-token budget)
+             -> run this step's prefill work-items -> fused decode step
              -> sample -> retire finished slots
 
 Requests are admitted and retired *independently* (continuous batching):
@@ -13,10 +14,22 @@ mixed-length batch never decodes into dead slots while stragglers finish
 (the static-batch baseline that does is kept as ``policy="static"`` for
 the serve benchmark).
 
-Device-side structure per step: at most a few batch-1 prefills (one jit
-per distinct prompt length) plus exactly one fused decode call over the
-whole pool with *per-slot* positions (``lm_decode`` takes a [n_slots]
-position vector — slots of mixed age each attend at their own offset).
+Prompt ingestion is either whole-prompt (power-of-two buckets) or — with
+``ServeConfig.prefill_chunk`` — *chunked*: long prompts become a sequence
+of fixed-size chunk work-items spread over consecutive steps, each
+resuming the slot's cache page where the previous chunk ended
+(``lm_prefill(start_pos=...)``), so one monster prompt no longer stalls
+every live decode slot for a whole prefill.  ``prefill_budget`` bounds
+the prompt tokens any step may ingest and ``admission="aware"`` lets
+short prompts pass a long head-of-line prompt within the leftover budget
+(scheduler.py has the planning; docs/serving.md the design).
+
+Device-side structure per step: at most ``prefill_budget`` tokens of
+batch-1 prefill work (one jit per bucket, one per chunk offset) plus
+exactly one fused decode call over the fully-ingested slots with
+*per-slot* positions (``lm_decode`` takes a [n_slots] position vector —
+slots of mixed age each attend at their own offset; mid-prefill slots
+are masked out like dead ones).
 
 Plans: prefill runs under ``prefill_tp`` (dispatch capacity sharded over
 data), decode under ``decode_std`` (weights stay sharded, KV sequence over
@@ -80,6 +93,31 @@ class ServeConfig:
     # (ring-buffer caches would retain padded positions).
     prefill_buckets: bool = True
     min_bucket: int = 8          # smallest prefill bucket length
+    # Chunked prefill (docs/serving.md): prompts longer than
+    # ``prefill_chunk`` tokens are ingested as a sequence of fixed-size
+    # chunk work-items spread over consecutive engine steps, each resuming
+    # the cache where the previous chunk ended (lm_prefill start_pos) —
+    # decode keeps running between chunks, so one long prompt no longer
+    # stalls every live decode slot for a whole monster prefill.  0
+    # disables (whole-prompt prefill, the pre-chunking behavior).  Same
+    # architecture restrictions as bucketing (ssm/hybrid, sliding-window):
+    # the engine falls back loudly (RuntimeWarning) when unsupported.
+    prefill_chunk: int = 0
+    # Max prompt tokens of prefill work any single engine step may carry
+    # (0 = unlimited).  Enforced by the Scheduler; with chunking enabled
+    # the chunk size must fit the budget.  The budget counts *real*
+    # prompt tokens: device work is chunk-/bucket-granular (a final
+    # partial chunk pads to the chunk size, a whole prompt to its
+    # power-of-two bucket), so the per-step device-token bound is the
+    # budget rounded up to those granularities — use chunking for tight
+    # stall bounds (buckets can pad up to 2x).
+    prefill_budget: int = 0
+    # Admission policy: "fcfs" pops strictly in arrival order; "aware"
+    # (prompt-length-aware) skips requests whose next chunk does not fit
+    # the step's remaining prefill budget and admits the earliest one
+    # that does, so short prompts never queue behind a long head-of-line
+    # prompt.
+    admission: str = "fcfs"
 
 
 class ServeEngine:
@@ -98,14 +136,57 @@ class ServeEngine:
         # leak into recurrent state (ssm/hybrid mixers scan sequentially)
         # nor linger in a ring-buffer KV cache (sliding-window layers).
         from repro.configs.base import layer_kinds
-        self._can_bucket = (sc.prefill_buckets
-                            and not cfg.sliding_window
-                            and all(k.mixer != "mamba"
-                                    for k in layer_kinds(cfg)))
+        stateless = (not cfg.sliding_window
+                     and all(k.mixer != "mamba" for k in layer_kinds(cfg)))
+        self._can_bucket = sc.prefill_buckets and stateless
+        # Chunked prefill shares the restriction (resuming mid-prompt
+        # needs the whole prefix recoverable from the KV cache): refuse
+        # loudly and fall back to whole-prompt prefill otherwise.
+        self._chunk = 0
+        if sc.prefill_chunk > 0:
+            if not stateless:
+                import warnings
+                warnings.warn(
+                    "chunked prefill requires stateless attention caches; "
+                    "ssm/hybrid state scans and sliding-window ring "
+                    "buffers cannot resume mid-prompt — falling back to "
+                    "whole-prompt prefill (docs/serving.md)",
+                    RuntimeWarning, stacklevel=2)
+            else:
+                c = sc.prefill_chunk
+                if c % cfg.kv_block != 0 or (c > cfg.q_block
+                                             and c % cfg.q_block != 0):
+                    raise ValueError(
+                        f"prefill_chunk={c} must be a multiple of "
+                        f"kv_block={cfg.kv_block} (and of q_block="
+                        f"{cfg.q_block} when larger) so chunk boundaries "
+                        "stay block-aligned with whole-prompt prefill")
+                if jnp.dtype(cfg.param_dtype) != jnp.dtype(
+                        cfg.compute_dtype):
+                    # The cached prefix K/V a chunk attends round-trips
+                    # through the cache dtype; a whole-prompt prefill
+                    # attends fresh compute-dtype K/V, so a narrower
+                    # cache breaks the bit-identical-to-whole-prompt
+                    # guarantee (outputs stay valid, streams may differ).
+                    import warnings
+                    warnings.warn(
+                        "chunked prefill with cache dtype "
+                        f"{jnp.dtype(cfg.param_dtype).name} != compute "
+                        f"dtype {jnp.dtype(cfg.compute_dtype).name}: "
+                        "chunk attention reads the cached prefix at "
+                        "cache precision, so outputs are not guaranteed "
+                        "bit-identical to whole-prompt prefill "
+                        "(docs/serving.md)", RuntimeWarning, stacklevel=2)
+                self._chunk = c
         self._prefill = jax.jit(
             lambda p, b, c, li, v: lm.lm_prefill(p, b, c, cfg,
                                                  ctx=self.prefill_ctx,
                                                  last_index=li, valid=v))
+        # One jitted chunk function per chunk *offset* (chunk length is
+        # fixed, so compile count is O(max_len / prefill_chunk)); the
+        # static offset keeps the blockwise kv ranges pruned above the
+        # shifted diagonal.
+        self._chunk_fns: dict[int, object] = {}
         self._decode = jax.jit(
             lambda p, t, c, i, v: lm.lm_decode(p, t, c, i, cfg,
                                                ctx=self.decode_ctx,
@@ -132,13 +213,18 @@ class ServeEngine:
         self._blank_page = pm.materialize(self.kv.seq_defs,
                                           jax.random.PRNGKey(0))
         self.queue = RequestQueue()
-        self.sched = Scheduler(self.sc.n_slots, policy=self.sc.policy)
+        self.sched = Scheduler(self.sc.n_slots, policy=self.sc.policy,
+                               admission=self.sc.admission,
+                               prefill_chunk=self._chunk,
+                               prefill_budget=self.sc.prefill_budget)
         self.step_count = 0
         self.telemetry: list[dict] = []
         self.prefill_lengths: set[int] = set()   # distinct compiled shapes
+        self.chunk_offsets: set[int] = set()     # distinct chunk compiles
         self.stats = {"prefills": 0, "decode_steps": 0, "reshards": 0,
                       "generated_tokens": 0, "slot_steps_active": 0,
-                      "slot_steps_total": 0, "overflow_total": 0.0}
+                      "slot_steps_total": 0, "overflow_total": 0.0,
+                      "prefill_chunks": 0, "prefill_tokens": 0}
 
     def submit(self, prompt, max_new_tokens: int, arrival: int = 0
                ) -> Request:
@@ -147,6 +233,30 @@ class ServeEngine:
             raise ValueError(
                 f"prompt ({prompt.shape[0]}) + max_new_tokens "
                 f"({max_new_tokens}) exceeds max_len {self.sc.max_len}")
+        if (self._chunk == 0 and self.sc.prefill_budget > 0
+                and prompt.shape[0] > self.sc.prefill_budget):
+            why = ("this architecture refused chunked prefill "
+                   "(ssm/sliding-window — see the construction warning), "
+                   "so the whole prompt must fit the budget"
+                   if self.sc.prefill_chunk > 0 else
+                   "chunked prefill is off — enable "
+                   "ServeConfig.prefill_chunk to split it")
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) exceeds the per-step prefill "
+                f"budget ({self.sc.prefill_budget}) and {why}")
+        if self._chunk and prompt.shape[0] > self._chunk:
+            # Every chunk ships a full prefill_chunk-token buffer (the
+            # final one padded), so its cache write spans
+            # [start, start + chunk); a window past max_len would make
+            # the dynamic_update_slice clamp its start and silently
+            # overwrite already-cached prefix positions.
+            padded = -(-int(prompt.shape[0]) // self._chunk) * self._chunk
+            if padded > self.sc.max_len:
+                raise ValueError(
+                    f"prompt ({prompt.shape[0]}) rounds up to {padded} "
+                    f"chunk-padded tokens > max_len {self.sc.max_len}: "
+                    "the final chunk's cache write would not fit the "
+                    "page — raise max_len or lower prefill_chunk")
         req = Request(rid=self._rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=arrival)
         self._rid += 1
@@ -228,15 +338,76 @@ class ServeEngine:
             self.stats["reshards"] += 1
         self.kv.insert(slot, page, req.prompt_len)
         self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += plen
+        req.prefill_pos = plen
+        req.first_token_step = self.step_count
         tok = self._sample_rows(logits, [req])[0]
         self._append_token(req, tok, slot)
 
+    # -- chunked prefill ---------------------------------------------------
+    def _chunk_fn(self, off: int):
+        """Jitted prefill for one chunk offset (static start_pos)."""
+        fn = self._chunk_fns.get(off)
+        if fn is None:
+            fn = jax.jit(lambda p, b, c, li, v, _o=off: lm.lm_prefill(
+                p, b, c, self.cfg, ctx=self.prefill_ctx, last_index=li,
+                valid=v, start_pos=_o))
+            self._chunk_fns[off] = fn
+        return fn
+
+    def _run_chunks(self, slot: int, req: Request, items: list) -> None:
+        """Ingest this step's chunk work-items for one slot (consecutive
+        prompt ranges, each resuming where the previous ended).  The
+        in-flight page is *staged* in the SlotKVCache between steps and
+        folded into the pool only by the completing chunk group — a
+        mid-prefill slot never decodes, so per-chunk pool blends (and
+        on-mesh reshards) would be pure hot-path overhead.  The final
+        chunk completes the prompt and samples the first token."""
+        c = self._chunk
+        page = self.kv.staged(slot) or self._blank_page
+        logits = None
+        for w in items:
+            chunk = np.zeros((c,), np.int32)
+            chunk[:w.length] = req.prompt[w.start:w.start + w.length]
+            valid = np.zeros((1, c), np.float32)
+            valid[0, :w.length] = 1.0
+            self.chunk_offsets.add(w.start)
+            # Chunk-local index of the final prompt token (only read on
+            # the last chunk; clamped elsewhere).
+            li = min(req.prompt_len - 1 - w.start, c - 1)
+            logits, page = self._chunk_fn(w.start)(
+                self.params, {"tokens": jnp.asarray(chunk)[None, :]}, page,
+                jnp.asarray(li, jnp.int32), jnp.asarray(valid))
+            req.prefill_pos = w.start + w.length
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_tokens"] += w.length
+        done = not req.prefilling
+        if done and self.ctx.mesh is not None:
+            # the staged pages stayed on the prefill plan; the finished
+            # page reshards once, exactly like a whole-prompt page.
+            page = self.decode_ctx.reshard(page, self.kv.seq_defs)
+            self.stats["reshards"] += 1
+        self.kv.append(slot, page, req.prefill_pos, last=done)
+        if done:
+            self.stats["prefills"] += 1
+            req.first_token_step = self.step_count
+            tok = self._sample_rows(logits, [req])[0]
+            self._append_token(req, tok, slot)
+
     def step(self) -> int:
-        """One engine step: admit, prefill, decode, sample, retire.
-        Returns the number of slots that were active in the decode."""
-        for slot, req in self.sched.admit(self.queue, self.step_count):
-            self._start(slot, req)
-        active = self.sched.active()
+        """One engine step: plan prefill work (admission + chunks under
+        the per-step token budget), run it, then one fused decode over
+        the fully-prefilled slots, sample, retire.  Returns the number of
+        slots that were active in the decode."""
+        by_slot: dict[int, list] = {}
+        for w in self.sched.schedule_prefill(self.queue, self.step_count):
+            if w.start == 0 and w.length == w.req.prompt_len:
+                self._start(w.slot, w.req)   # whole prompt: bucketed path
+            else:
+                by_slot.setdefault(w.slot, []).append(w)
+        for slot, items in by_slot.items():
+            self._run_chunks(slot, items[0].req, items)
+        active = self.sched.decoding()
         if active:
             n = self.sc.n_slots
             toks = np.zeros((n,), np.int32)

@@ -89,6 +89,10 @@ class SlotKVCache:
             cache = ctx.reshard(cache, self.defs)
         self.cache = cache
         self.lengths = np.zeros((n_slots,), np.int64)   # tokens cached/slot
+        # In-flight partial pages (chunked prefill): staged per slot and
+        # folded into the pooled cache only when the prompt completes —
+        # one full-pool blend per prompt instead of one per chunk group.
+        self._staged: dict[int, object] = {}
 
     def _leaves(self, tree) -> tuple:
         return tuple(jax.tree_util.tree_leaves(tree))
@@ -104,10 +108,39 @@ class SlotKVCache:
             self._leaves(self.cache), self._leaves(seq_cache),
             jnp.int32(slot), axes=self._axes_flat))
         self.lengths[slot] = length
+        self._staged.pop(slot, None)
+
+    def append(self, slot: int, seq_cache, length: int, *,
+               last: bool = True) -> None:
+        """Append a *partial-prompt* batch-1 page for ``slot``.
+
+        Chunked prefill delivers the page after every step's chunk group
+        (each page carries the whole prompt prefix [0, length), a
+        superset of the previous one).  Intermediate pages are *staged* —
+        the next chunk resumes from :meth:`staged`, and a slot mid-
+        prefill never decodes, so blending them into the pool would be
+        pure overhead on the serving hot path.  ``last=True`` (the
+        completing chunk group) folds the finished page into the pool:
+        one full-pool blend per prompt.  ``length`` must grow
+        monotonically while a prompt is in flight.
+        """
+        assert length >= self.lengths[slot], \
+            f"append shrank slot {slot}: {length} < {self.lengths[slot]}"
+        if last:
+            self.insert(slot, seq_cache, length)
+        else:
+            self._staged[slot] = seq_cache
+            self.lengths[slot] = length
+
+    def staged(self, slot: int):
+        """The slot's in-flight partial page (None when no chunked
+        prefill is in flight — chunk 0 starts from a blank page)."""
+        return self._staged.get(slot)
 
     def release(self, slot: int) -> None:
         """Logical free: the next insert overwrites the page in full."""
         self.lengths[slot] = 0
+        self._staged.pop(slot, None)
 
     def evict(self, slot: int) -> None:
         """Zero a slot's pages (release + hygiene, e.g. for checkpoints)."""
@@ -115,6 +148,7 @@ class SlotKVCache:
             self._leaves(self.cache), jnp.int32(slot),
             axes=self._axes_flat))
         self.lengths[slot] = 0
+        self._staged.pop(slot, None)
 
     def compact(self, perm) -> None:
         """Permute slots: page i of the new pool is page perm[i] of the
@@ -125,3 +159,5 @@ class SlotKVCache:
             self._leaves(self.cache), jnp.asarray(perm, jnp.int32),
             axes=self._axes_flat))
         self.lengths = self.lengths[perm]
+        self._staged = {i: self._staged[int(p)] for i, p in enumerate(perm)
+                        if int(p) in self._staged}

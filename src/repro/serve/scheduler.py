@@ -3,10 +3,11 @@
 The engine owns a fixed pool of ``n_slots`` sequence slots (static shapes:
 the decode step is one jitted call over the whole pool every step).  The
 scheduler's job is the part XLA cannot do — deciding *which* request
-occupies which slot at which step:
+occupies which slot at which step, and *how much prefill work* a step may
+carry:
 
 * :class:`Request` — one generation job: prompt, budget, and (as the
-  engine runs) the sampled tokens and completion state.
+  engine runs) the prefill progress, sampled tokens and completion state.
 * :class:`RequestQueue` — FIFO admission with per-request ``arrival``
   steps, so staggered traffic can be replayed deterministically.
 * :class:`Scheduler` — the slot pool.  ``policy="continuous"`` admits a
@@ -14,6 +15,20 @@ occupies which slot at which step:
   batch-drain stalls); ``policy="static"`` only admits into an *empty*
   pool (the classic static-batch baseline, kept for the serve benchmark's
   before/after comparison).
+
+Prompt-length-aware admission (docs/serving.md): :meth:`Scheduler.
+schedule_prefill` plans each engine step's prefill work as a list of
+:class:`PrefillWork` chunk items.  With ``prefill_chunk > 0`` a long
+prompt becomes a *sequence* of fixed-size chunk work-items spread over
+consecutive steps (chunked prefill — decode keeps running between
+chunks); with ``prefill_budget > 0`` no step ever plans more than that
+many prompt tokens of prefill.  ``admission="fcfs"`` admits strictly in
+arrival order — a head request whose next chunk does not fit the
+remaining budget still claims its slot (its chunks start on the next
+step's budget), and later arrivals may fill the leftover budget behind
+it; ``admission="aware"`` (prompt-length-aware) instead skips such
+requests entirely, leaving the slot to the earliest request that fits —
+short prompts are never stuck behind a long head-of-line prompt.
 
 All of this is host-side bookkeeping over numpy/python state; device work
 (prefill, decode, KV writes) stays in ``engine.py`` / ``kv_cache.py``.
@@ -38,6 +53,8 @@ class Request:
     done_reason: str | None = None      # "eos" | "length"
     admitted_step: int | None = None
     finished_step: int | None = None
+    prefill_pos: int = 0                # prompt tokens prefilled so far
+    first_token_step: int | None = None  # step the first token sampled at
 
     @property
     def done(self) -> bool:
@@ -46,6 +63,24 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(np.asarray(self.prompt).shape[-1])
+
+    @property
+    def prefilling(self) -> bool:
+        """Admitted but the prompt is not fully ingested yet (a chunked
+        prefill in flight across engine steps)."""
+        return self.prefill_pos < self.prompt_len
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillWork:
+    """One prefill work-item: ingest ``length`` prompt tokens of ``req``
+    starting at prompt position ``start`` into ``slot``'s cache page.
+    Whole-prompt prefill is the single item (0, prompt_len); chunked
+    prefill emits one item per chunk."""
+    slot: int
+    req: Request
+    start: int
+    length: int
 
 
 class RequestQueue:
@@ -57,10 +92,20 @@ class RequestQueue:
     def push(self, req: Request) -> None:
         self._q.append(req)
 
-    def pop_ready(self, step: int) -> Request | None:
-        """Earliest-submitted request whose arrival step has passed."""
+    def pop_ready(self, step: int, fits=None) -> Request | None:
+        """Earliest-submitted request whose arrival step has passed.
+
+        ``fits`` (optional predicate) restricts the pop to requests the
+        caller can start right now — the prompt-length-aware admission
+        policy passes a next-chunk-fits-the-budget check here, so a long
+        head-of-line prompt is skipped (not starved: every step's budget
+        resets, and a chunk never exceeds the budget by construction, so
+        the head admits as soon as a slot is free at step start).
+        Without ``fits`` (fcfs) the head is popped regardless — it
+        claims its slot even when no budget is left for its chunks this
+        step."""
         for i, req in enumerate(self._q):
-            if req.arrival <= step:
+            if req.arrival <= step and (fits is None or fits(req)):
                 return self._q.pop(i)
         return None
 
@@ -72,13 +117,30 @@ class RequestQueue:
 
 
 class Scheduler:
-    """Fixed slot pool with continuous (default) or batch-drain admission."""
+    """Fixed slot pool with continuous (default) or batch-drain admission.
 
-    def __init__(self, n_slots: int, policy: str = "continuous"):
+    ``prefill_chunk``: chunk size in tokens (0 = whole-prompt prefill).
+    ``prefill_budget``: max prompt tokens planned per engine step
+    (0 = unlimited).  ``admission``: "fcfs" | "aware" (see module doc).
+    """
+
+    def __init__(self, n_slots: int, policy: str = "continuous", *,
+                 admission: str = "fcfs", prefill_chunk: int = 0,
+                 prefill_budget: int = 0):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown scheduling policy {policy!r}")
+        if admission not in ("fcfs", "aware"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        if prefill_chunk > 0 and prefill_budget > 0 \
+                and prefill_chunk > prefill_budget:
+            raise ValueError(
+                f"prefill_chunk ({prefill_chunk}) > prefill_budget "
+                f"({prefill_budget}): no chunk could ever be scheduled")
         self.n_slots = n_slots
         self.policy = policy
+        self.admission = admission
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
         self.slots: list[Request | None] = [None] * n_slots
         self.admitted = 0
         self.retired = 0
@@ -88,29 +150,103 @@ class Scheduler:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def active(self) -> list[tuple[int, Request]]:
+        """Occupied slots (prefilling or decoding)."""
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def decoding(self) -> list[tuple[int, Request]]:
+        """Occupied slots whose prompt is fully ingested — the slots the
+        fused decode step feeds (a mid-prefill slot has no token to feed
+        and must not decode garbage)."""
+        return [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and not r.prefilling]
+
+    # -- per-step prefill planning ---------------------------------------
+    def _next_cost(self, req: Request) -> int:
+        """Prompt tokens the request's next work-item ingests."""
+        remaining = req.prompt_len - req.prefill_pos
+        if self.prefill_chunk <= 0:
+            return remaining
+        return min(self.prefill_chunk, remaining)
+
+    def _emit_chunks(self, slot: int, req: Request, planned: dict,
+                     spent: int, budget: int | None
+                     ) -> tuple[list[PrefillWork], int]:
+        """Chunk work-items for one request, up to the remaining budget.
+        ``planned`` tracks positions planned this step but not yet
+        executed (the engine runs the items after planning finishes)."""
+        items: list[PrefillWork] = []
+        pos = planned.get(req.rid, req.prefill_pos)
+        while pos < req.prompt_len:
+            n = (req.prompt_len - pos if self.prefill_chunk <= 0
+                 else min(self.prefill_chunk, req.prompt_len - pos))
+            if budget is not None and spent + n > budget:
+                break
+            items.append(PrefillWork(slot, req, pos, n))
+            spent += n
+            pos += n
+            if self.prefill_chunk <= 0:
+                break
+        planned[req.rid] = pos
+        return items, spent
+
+    def schedule_prefill(self, queue: RequestQueue | None, step: int
+                         ) -> list[PrefillWork]:
+        """Plan one engine step's prefill work.
+
+        1. continue in-flight chunked prefills (slot order — deterministic);
+        2. admit ready requests from the queue into free slots, each with
+           as many chunk work-items as the remaining budget allows.
+
+        The total token count of the returned items never exceeds
+        ``prefill_budget`` (the hypothesis suite pins this invariant);
+        continuous admission fills every free slot the budget can feed,
+        static admission waits for the whole pool to drain.
+        """
+        budget = self.prefill_budget if self.prefill_budget > 0 else None
+        planned: dict[int, int] = {}
+        out: list[PrefillWork] = []
+        spent = 0
+        for slot, req in self.active():
+            if req.prefilling:
+                items, spent = self._emit_chunks(slot, req, planned,
+                                                 spent, budget)
+                out.extend(items)
+        can_admit = queue is not None and not (
+            self.policy == "static"
+            and any(r is not None for r in self.slots))
+        if can_admit:
+            fits = None
+            if self.admission == "aware" and budget is not None:
+                # Reads the *current* spent at each pop: prompt-length-
+                # aware admission skips requests whose next chunk would
+                # overflow what is left of this step's budget.
+                fits = lambda r: self._next_cost(r) <= budget - spent  # noqa: E731
+            for slot in self.free_slots():
+                if budget is not None and spent >= budget:
+                    break
+                req = queue.pop_ready(step, fits)
+                if req is None:
+                    break
+                req.admitted_step = step
+                self.slots[slot] = req
+                self.admitted += 1
+                items, spent = self._emit_chunks(slot, req, planned,
+                                                 spent, budget)
+                out.extend(items)
+        self.max_concurrent = max(self.max_concurrent, len(self.active()))
+        return out
 
     def admit(self, queue: RequestQueue, step: int
               ) -> list[tuple[int, Request]]:
-        """Move ready requests from the queue into free slots.
-
-        Continuous policy fills every free slot; static policy only admits
-        when the whole pool has drained (the baseline's stall, on purpose).
-        """
-        if self.policy == "static" and any(r is not None for r in self.slots):
-            return []
-        out = []
-        for slot in self.free_slots():
-            req = queue.pop_ready(step)
-            if req is None:
-                break
-            req.admitted_step = step
-            self.slots[slot] = req
-            out.append((slot, req))
-        self.admitted += len(out)
-        self.max_concurrent = max(self.max_concurrent,
-                                  len(self.active()))
-        return out
+        """Legacy whole-prompt admission (kept for scheduler-level tests):
+        equivalent to ``schedule_prefill`` with no chunking or budget,
+        returning the admitted (slot, request) pairs."""
+        assert self.prefill_chunk <= 0 and self.prefill_budget <= 0, \
+            "use schedule_prefill with chunking/budget configured"
+        before = {id(r) for r in self.slots if r is not None}
+        return [(w.slot, w.req)
+                for w in self.schedule_prefill(queue, step)
+                if id(w.req) not in before]
 
     def retire(self, slot: int) -> Request:
         req = self.slots[slot]

@@ -16,6 +16,14 @@ import pytest
 
 
 def pytest_collection_modifyitems(config, items):
+    # Guard: the serving parity matrix's slowest cells — interpret-mode
+    # pallas backends and the 8-device subprocess — are auto-marked slow
+    # so tier-1 keeps its wall-clock; `make test-slow` runs the full
+    # matrix (policies x backends x chunked/unchunked x mesh sizes).
+    for item in items:
+        if item.name.startswith("test_serve_parity_matrix") and (
+                "pallas" in item.name or "8device" in item.name):
+            item.add_marker(pytest.mark.slow)
     if config.option.markexpr:
         return          # explicit -m wins
     deselected = [i for i in items

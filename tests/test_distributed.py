@@ -82,6 +82,78 @@ def test_gspmd_moe_sharded_matches_single_device():
     assert "GSPMD_OK" in out
 
 
+def test_ep_load_psum_global_batch_semantics():
+    """ROADMAP fix: the EP schedule's balancing losses must be computed
+    from the *combined-batch* (psum'd) importance/load vectors, not the
+    pmean of shard-local CVs — the paper's Eqs. (6)/(11) sum over all
+    data-parallel shards.  Construction: every shard routes all of its
+    tokens to a different expert pair, so each shard is maximally skewed
+    locally while the global load is perfectly balanced; the EP aux loss
+    must see the balanced global batch.  Also covers expert_choice, whose
+    shard-local load is capacity-uniform by construction (only the psum'd
+    global view can ever show imbalance)."""
+    out = _run("""
+        from repro.common import param as pm
+        from repro.core import router as rl
+        from repro.core.moe import MoEArgs, moe_defs
+        from repro.core.expert_parallel import moe_apply_ep
+        from repro.sharding import context
+        mesh = context.make_mesh((2, 4), ("data", "model"))
+        e, d, t = 8, 16, 128               # 8 shards x 16 tokens
+        a = MoEArgs(n_experts=e, k=2, d_model=d, d_ff=32,
+                    dtype=jnp.float32, capacity_factor=8.0,
+                    eval_capacity_factor=8.0)
+        params = pm.materialize(moe_defs(a), jax.random.PRNGKey(0))
+        # Gate: feature direction i -> logits peaked at experts (i, i+1).
+        wg = np.zeros((d, e), np.float32)
+        for i in range(e):
+            wg[i, i] = 10.0
+            wg[i, (i + 1) % e] = 5.0
+        params["gate"]["wg"] = jnp.asarray(wg)
+        # Token block s (= shard s under the (data, model) token sharding)
+        # points along feature s: the whole shard routes to (s, s+1).
+        x = np.zeros((t, d), np.float32)
+        for s in range(8):
+            x[s * 16:(s + 1) * 16, s] = 4.0
+        x += 0.01 * np.random.RandomState(0).randn(t, d)
+        x = jnp.asarray(x)
+        _, aux = jax.jit(lambda p, x: moe_apply_ep(
+            p, x, a, train=False, ctx=context.MeshContext.for_mesh(
+                mesh, "dp_tp_ep")))(params, x)
+        # Reference: what the old pmean-of-shard-local losses would say.
+        router = rl.build(a)
+        local = []
+        for s in range(8):
+            dec = router.route(params, x[s * 16:(s + 1) * 16],
+                               train=False)
+            local.append(float(dec.aux_loss))
+        local_mean = float(np.mean(local))
+        global_aux = float(aux["aux_loss"])
+        # Each shard is one-expert-pair skewed -> big local CVs; the
+        # combined batch is balanced -> the EP loss must be tiny.
+        assert local_mean > 0.5, local_mean
+        assert global_aux < 0.05, global_aux
+        assert global_aux < local_mean / 10.0, (global_aux, local_mean)
+        assert float(aux["metrics"]["cv_load"]) < 0.2
+        assert abs(float(aux["metrics"]["max_over_mean_load"]) - 1.0) < 0.3
+        # expert_choice: shard-local load is capacity-uniform by
+        # construction; the psum'd vector is what the metrics report.
+        a_ec = MoEArgs(n_experts=e, k=2, d_model=d, d_ff=32,
+                       dtype=jnp.float32,
+                       router=rl.RouterSpec(policy="expert_choice",
+                                            capacity_factor=8.0))
+        p_ec = pm.materialize(moe_defs(a_ec), jax.random.PRNGKey(0))
+        p_ec["gate"]["wg"] = jnp.asarray(wg)
+        _, aux_ec = jax.jit(lambda p, x: moe_apply_ep(
+            p, x, a_ec, train=False, ctx=context.MeshContext.for_mesh(
+                mesh, "dp_tp_ep")))(p_ec, x)
+        assert np.isfinite(float(aux_ec["aux_loss"]))
+        assert float(aux_ec["metrics"]["cv_load"]) < 1e-3
+        print("EP_GLOBAL_LOAD_OK")
+    """)
+    assert "EP_GLOBAL_LOAD_OK" in out
+
+
 def test_elastic_remesh_restore(tmp_path):
     """Checkpoint written under one topology restores under another
     (node-loss scenario: 8 -> 4 devices) with identical values."""

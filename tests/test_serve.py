@@ -131,6 +131,34 @@ def test_kv_cache_slot_ops(moe_setup):
     assert kv.lengths.tolist() == [10, 8, 0]
 
 
+def test_kv_cache_append_stages_partial_pages(moe_setup):
+    """Chunked prefill's partial pages: intermediate appends stage (the
+    pool is untouched — a mid-prefill slot never decodes), the last
+    append folds into the pool, and lengths grow monotonically."""
+    cfg, _ = moe_setup
+    kv = SlotKVCache(cfg, n_slots=2, max_len=32)
+
+    def page(value):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.full(a.shape, value, a.dtype),
+            pm.materialize(kv.seq_defs, jax.random.PRNGKey(0)))
+
+    pool_before = jax.tree_util.tree_leaves(kv.cache)
+    kv.append(0, page(1.0), length=8, last=False)
+    assert kv.staged(0) is not None and kv.lengths[0] == 8
+    for a, b in zip(pool_before, jax.tree_util.tree_leaves(kv.cache)):
+        assert a is b                        # pool untouched while staged
+    with pytest.raises(AssertionError):      # monotonic growth
+        kv.append(0, page(2.0), length=4, last=False)
+    kv.append(0, page(2.0), length=16, last=True)
+    assert kv.staged(0) is None and kv.lengths[0] == 16
+    leaf = jax.tree_util.tree_leaves(kv.cache)[0]
+    ax = jax.tree_util.tree_leaves(kv._batch_axes)[0]
+    assert np.unique(np.take(np.asarray(leaf), 0, axis=ax)).tolist() == [2]
+    kv.release(0)
+    assert kv.lengths[0] == 0 and kv.staged(0) is None
+
+
 # ---------------------------------------------------------------------------
 # continuous batching == sequential generation, bit for bit (greedy)
 # ---------------------------------------------------------------------------
@@ -360,6 +388,162 @@ def test_bucketing_disabled_for_stateful_mixers():
     eng.submit(np.arange(1, 6, dtype=np.int32), 3)   # length-5 prompt
     eng.run()
     assert eng.prefill_lengths == {5}                # exact, not bucketed
+
+
+def test_chunking_refused_for_stateful_mixers():
+    """Chunked prefill shares bucketing's restriction (resuming
+    mid-prompt needs the whole prefix recoverable from the KV cache):
+    configuring it on an ssm model must fall back *loudly* to
+    whole-prompt prefill, not silently chunk through recurrent state."""
+    from repro.configs.base import get_config
+    cfg = get_config("falcon-mamba-7b").replace(
+        n_layers=2, d_model=32, vocab_size=64, ssm_d_state=4,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    with pytest.warns(RuntimeWarning, match="chunked prefill"):
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_len=32, n_slots=2, prefill_chunk=8))
+    assert eng._chunk == 0                  # fell back to whole-prompt
+    eng.submit(np.arange(1, 14, dtype=np.int32), 3)  # longer than chunk
+    eng.run()
+    assert eng.stats["prefill_chunks"] == 0
+    assert eng.prefill_lengths == {13}      # exact whole-prompt prefill
+
+
+def test_bucketing_and_chunking_refused_for_sliding_window():
+    """Sliding-window ring-buffer caches retain padded positions and make
+    the chunk prefix ambiguous: buckets must stay auto-disabled and
+    chunked prefill must refuse (loud fallback) on such architectures."""
+    from conftest import small_config
+    cfg = small_config("gemma3-27b")       # 5:1 local:global, window=32
+    assert cfg.sliding_window
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    with pytest.warns(RuntimeWarning, match="chunked prefill"):
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_len=64, n_slots=2, prefill_chunk=16, prefill_budget=32))
+    assert not eng._can_bucket and eng._chunk == 0
+    # the scheduler was built without chunking: work-items are
+    # whole-prompt and the budget guards at submit time instead
+    assert eng.sched.prefill_chunk == 0
+    with pytest.raises(ValueError, match="prefill budget"):
+        eng.submit(np.arange(1, 40, dtype=np.int32), 2)  # 39 > budget 32
+
+
+def test_chunk_window_must_fit_page(moe_setup):
+    """The final chunk ships a full chunk-padded buffer; a prompt whose
+    chunk-rounded length exceeds max_len would make that write clamp at
+    the page boundary and silently overwrite cached prefix positions —
+    submit must reject it loudly instead.  Triggerable only when
+    max_len is not a chunk multiple (e.g. the bench's 96-chunk / 512
+    page): prompt + budget fit the page but the padded window does not."""
+    cfg, params = moe_setup
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=56, n_slots=2,
+                                               prefill_chunk=16))
+    eng.submit(np.full((48,), 1, np.int32), 4)     # 48 -> 48 padded: fits
+    with pytest.raises(ValueError, match="chunk-padded"):
+        eng.submit(np.full((50,), 1, np.int32), 4)  # 50 -> 64 padded > 56
+    # a short prompt (no chunking) near the page end stays accepted
+    req = eng.submit(np.full((12,), 1, np.int32), 40)
+    assert req.prompt_len == 12
+
+
+# ---------------------------------------------------------------------------
+# serving parity matrix: router policy x kernel backend x chunked prefill
+# (the conftest guard marks the interpret-mode pallas cells and the
+# 8-device subprocess as `slow`; `make test-slow` runs the full matrix)
+# ---------------------------------------------------------------------------
+
+# Long-prompt staggered mix: 40/33 force multi-chunk prefill at chunk=16.
+MATRIX_TRACE = [(40, 4, 0), (8, 3, 0), (33, 5, 1), (12, 4, 2)]
+CHUNK_KW = dict(prefill_chunk=16, prefill_budget=32, admission="aware")
+
+
+def _matrix_cfg(policy: str, backend: str):
+    from repro.core.router import RouterSpec
+    return _moe_cfg().replace(
+        kernel_backend=backend,
+        router=RouterSpec(policy=policy, capacity_factor=2.0))
+
+
+@pytest.mark.parametrize("chunked", [False, True], ids=["whole", "chunked"])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("policy", ["noisy_topk", "expert_choice"])
+def test_serve_parity_matrix(policy, backend, chunked):
+    """The correctness bar across the whole configuration surface: greedy
+    outputs from the continuous-batching engine (staggered long-prompt
+    mix, chunked or whole-prompt prefill) are bit-identical to sequential
+    generation for every router policy x kernel backend combination."""
+    cfg = _matrix_cfg(policy, backend)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    rs = np.random.RandomState(2)
+    specs = [(rs.randint(1, cfg.vocab_size, (l,)).astype(np.int32), m, a)
+             for l, m, a in MATRIX_TRACE]
+    kw = CHUNK_KW if chunked else {}
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=3, **kw))
+    reqs = [eng.submit(p, m, arrival=a) for p, m, a in specs]
+    eng.run()
+    assert all(r.done for r in reqs)
+    if chunked:
+        # the long prompts really went through the chunked path
+        assert eng.stats["prefill_chunks"] >= 5
+        assert eng.chunk_offsets >= {0, 16, 32}
+    oracle = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=1))
+    for req, (p, m, _) in zip(reqs, specs):
+        oracle.reset()
+        ref = oracle.submit(p, m)
+        oracle.run()
+        assert ref.tokens == req.tokens, \
+            (policy, backend, chunked, req.rid, ref.tokens, req.tokens)
+
+
+def test_serve_parity_matrix_8device():
+    """The chunked cells of the matrix on a (data=2, model=4) fake mesh:
+    chunk pages reshard onto the decode plan after every chunk and greedy
+    outputs stay bit-identical to sequential generation on the mesh."""
+    out = _run("""
+        from repro.common import param as pm
+        from repro.configs.base import get_config
+        from repro.core.router import RouterSpec
+        from repro.models import lm
+        from repro.serve.engine import ServeConfig, ServeEngine
+        from repro.sharding import context
+
+        mesh = context.make_mesh((2, 4), ("data", "model"))
+        for policy in ("noisy_topk", "expert_choice"):
+            cfg = get_config("kimi-k2-1t-a32b").replace(
+                n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                head_dim=16, vocab_size=64, n_experts=4, moe_k=2,
+                moe_d_ff=32, param_dtype=jnp.float32,
+                compute_dtype=jnp.float32, q_block=16, kv_block=16,
+                router=RouterSpec(policy=policy, capacity_factor=2.0))
+            params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+            ctx = context.MeshContext.for_mesh(mesh, "decode_std")
+            eng = ServeEngine(params, cfg, ServeConfig(
+                max_len=64, n_slots=4, prefill_chunk=16,
+                prefill_budget=32, admission="aware"), ctx=ctx)
+            rs = np.random.RandomState(1)
+            specs = [(rs.randint(1, 64, (l,)), m, a)
+                     for l, m, a in [(40, 4, 0), (8, 3, 1), (33, 4, 2)]]
+            reqs = [eng.submit(p, m, arrival=a) for p, m, a in specs]
+            eng.run()
+            assert all(r.done for r in reqs)
+            # 40 and 33 chunk as 3 work-items each, 8 prefills whole;
+            # intermediate partial pages stay staged on the prefill
+            # plan, so exactly one reshard per completed prompt lands
+            # a page in the decode-plan pool.
+            assert eng.stats["prefill_chunks"] == 6
+            assert eng.stats["prefills"] == 3
+            assert eng.stats["reshards"] == 3
+            oracle = ServeEngine(params, cfg, ServeConfig(
+                max_len=64, n_slots=1), ctx=ctx)
+            for req, (p, m, _) in zip(reqs, specs):
+                oracle.reset()
+                ref = oracle.submit(p, m)
+                oracle.run()
+                assert ref.tokens == req.tokens, (policy, req.rid)
+        print("MATRIX8_OK")
+    """)
+    assert "MATRIX8_OK" in out
 
 
 def test_dense_model_has_no_telemetry():

@@ -1,0 +1,187 @@
+"""Scheduler / RequestQueue invariants (host-side, no device work).
+
+Property tests (hypothesis, when installed — same pattern as
+test_dispatch/test_gating) drive the scheduler through whole synthetic
+traffic traces and check the structural invariants the engine relies on:
+
+* no slot double-assignment: a request occupies at most one slot, a slot
+  at most one request, and every work-item targets the slot that owns its
+  request;
+* chunk continuity: work-items ingest contiguous prompt ranges, each
+  resuming exactly where the previous chunk ended;
+* the per-step prefill-token budget is never exceeded;
+* liveness: every submitted request is eventually admitted, fully
+  prefilled, decoded to its budget, and retired (admitted == retired).
+
+Without hypothesis the parametrized grid below covers the same invariants
+at fixed points (mixed chunked/unchunked, budgeted/unbudgeted, fcfs/aware,
+over/undersubscribed pools).
+"""
+import importlib.util
+
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import Request, RequestQueue, Scheduler
+
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+# (n_slots, chunk, budget, admission, specs) — specs are
+# (prompt_len, max_new_tokens, arrival) triples.
+GRID = [
+    (2, 0, 0, "fcfs",
+     [(8, 3, 0), (12, 2, 0), (5, 4, 1), (20, 1, 3)]),
+    (3, 4, 8, "aware",
+     [(17, 2, 0), (3, 3, 0), (9, 1, 0), (30, 2, 2), (4, 2, 2)]),
+    (1, 8, 8, "fcfs",
+     [(33, 2, 0), (7, 1, 5), (8, 3, 5)]),
+    (4, 4, 16, "aware",
+     [(40, 1, 0), (4, 1, 0), (4, 1, 0), (4, 1, 0), (18, 2, 1),
+      (2, 5, 9)]),
+    (2, 0, 16, "aware",                       # unchunked + budget
+     [(16, 2, 0), (10, 1, 0), (16, 3, 1), (3, 2, 1)]),
+]
+
+
+def _simulate(n_slots, chunk, budget, admission, specs, max_steps=5000):
+    """Drive a whole trace through the scheduler with a fake engine loop
+    (prefill work-items mark progress; decoding slots emit one token per
+    step) and assert every invariant along the way."""
+    queue = RequestQueue()
+    reqs = [Request(rid=i, prompt=np.zeros(plen, np.int32),
+                    max_new_tokens=mnt, arrival=arr)
+            for i, (plen, mnt, arr) in enumerate(specs)]
+    for r in reqs:
+        queue.push(r)
+    sched = Scheduler(n_slots, admission=admission, prefill_chunk=chunk,
+                      prefill_budget=budget)
+    step = 0
+    while (queue or sched.active()) and step < max_steps:
+        work = sched.schedule_prefill(queue, step)
+        # budget invariant: one step never plans more prompt tokens than
+        # the configured per-step budget
+        if budget > 0:
+            assert sum(w.length for w in work) <= budget, \
+                (step, [(w.req.rid, w.start, w.length) for w in work])
+        for w in work:
+            # the work-item's slot owns its request (no cross-wiring)
+            assert sched.slots[w.slot] is w.req, (step, w)
+            assert w.req.admitted_step is not None
+            assert w.req.arrival <= step        # never admitted early
+            # chunk continuity: resumes exactly where the last one ended
+            assert w.start == w.req.prefill_pos, (step, w)
+            assert 0 < w.length <= (chunk if chunk > 0
+                                    else w.req.prompt_len)
+            w.req.prefill_pos = w.start + w.length
+            assert w.req.prefill_pos <= w.req.prompt_len
+        # no slot double-assignment / request never in two slots
+        occupied = [r for r in sched.slots if r is not None]
+        assert len({id(r) for r in occupied}) == len(occupied)
+        assert len(occupied) <= n_slots
+        # fake decode: every fully-prefilled slot emits one token
+        for slot, r in sched.decoding():
+            r.tokens.append(0)
+            if len(r.tokens) >= r.max_new_tokens:
+                r.done_reason = "length"
+                sched.retire(slot)
+        step += 1
+    # liveness: the trace drains and every request retired complete
+    assert not queue and not sched.active(), \
+        f"stalled at step {step}: queue={len(queue)}"
+    assert sched.admitted == sched.retired == len(specs)
+    for r in reqs:
+        assert r.prefill_pos == r.prompt_len
+        assert len(r.tokens) == r.max_new_tokens
+
+
+def _legalize(n_slots, chunk, budget, admission, specs):
+    """Clamp generated parameters to the combinations the engine can
+    configure (chunk <= budget; unchunked prompts <= budget) — the same
+    guards ServeEngine enforces at init/submit time."""
+    if budget > 0 and chunk > budget:
+        chunk = budget
+    if budget > 0 and chunk == 0:
+        specs = [(min(p, budget), m, a) for p, m, a in specs]
+    return n_slots, chunk, budget, admission, specs
+
+
+@pytest.mark.parametrize("n_slots,chunk,budget,admission,specs", GRID)
+def test_scheduler_invariants(n_slots, chunk, budget, admission, specs):
+    _simulate(n_slots, chunk, budget, admission, specs)
+
+
+def test_scheduler_invariants_property():
+    pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (dev req)")
+    from hypothesis import given, settings, strategies as st
+
+    spec_st = st.tuples(st.integers(1, 40),      # prompt_len
+                        st.integers(1, 5),       # max_new_tokens
+                        st.integers(0, 12))      # arrival
+
+    @settings(deadline=None, max_examples=60)
+    @given(n_slots=st.integers(1, 5),
+           chunk=st.sampled_from([0, 4, 8, 16]),
+           budget=st.sampled_from([0, 8, 16, 32]),
+           admission=st.sampled_from(["fcfs", "aware"]),
+           specs=st.lists(spec_st, min_size=1, max_size=12))
+    def prop(n_slots, chunk, budget, admission, specs):
+        _simulate(*_legalize(n_slots, chunk, budget, admission, specs))
+
+    prop()
+
+
+def test_queue_pop_ready_fits_predicate():
+    """pop_ready(fits=...) pops the earliest *arrived* request passing the
+    predicate and skips (without reordering) the ones that fail it — the
+    hook prompt-length-aware admission uses to let short prompts pass a
+    long head-of-line prompt."""
+    q = RequestQueue()
+    for rid, (plen, arr) in enumerate([(30, 0), (4, 0), (8, 1), (2, 0)]):
+        q.push(Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                       max_new_tokens=1, arrival=arr))
+    short = lambda r: r.prompt_len <= 8  # noqa: E731
+    assert q.pop_ready(0, short).rid == 1      # skipped the length-30 head
+    assert q.pop_ready(0, short).rid == 3      # rid 2 hasn't arrived yet
+    assert q.pop_ready(0, short) is None       # only the long head remains
+    assert q.pop_ready(0).rid == 0             # no predicate: FIFO head
+    assert q.pop_ready(1).rid == 2
+    assert not q
+
+
+def test_scheduler_config_validation():
+    with pytest.raises(ValueError, match="admission"):
+        Scheduler(2, admission="shortest")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Scheduler(2, prefill_chunk=16, prefill_budget=8)
+
+
+def test_budget_spreads_admission_over_steps():
+    """Two 8-token prompts under a 8-token/step budget: the second
+    admission waits for the next step's budget; with chunking a long
+    prompt advances one chunk per step while decode continues."""
+    q = RequestQueue()
+    for rid in range(2):
+        q.push(Request(rid=rid, prompt=np.zeros(8, np.int32),
+                       max_new_tokens=2))
+    s = Scheduler(2, prefill_budget=8)
+    w0 = s.schedule_prefill(q, 0)
+    assert [(w.req.rid, w.length) for w in w0] == [(0, 8)]
+    for w in w0:
+        w.req.prefill_pos = w.start + w.length
+    w1 = s.schedule_prefill(q, 1)
+    assert [(w.req.rid, w.length) for w in w1] == [(1, 8)]
+
+    # chunked: a 24-token prompt takes 8 tokens of budget per step
+    q2 = RequestQueue()
+    long = Request(rid=9, prompt=np.zeros(24, np.int32), max_new_tokens=1)
+    q2.push(long)
+    s2 = Scheduler(1, prefill_chunk=8, prefill_budget=8)
+    starts = []
+    for step in range(3):
+        work = s2.schedule_prefill(q2, step)
+        starts += [(w.start, w.length) for w in work]
+        for w in work:
+            w.req.prefill_pos = w.start + w.length
+    assert starts == [(0, 8), (8, 8), (16, 8)]
+    assert not long.prefilling
