@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test-tier1 test-slow test-all test-kernels test-serve \
-	test-routing bench-micro bench-serve
+	test-routing bench-micro bench-serve bench-serve-prefix
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
@@ -19,11 +19,12 @@ test-kernels:
 
 # Continuous-batching serving suite (part of tier-1; this target runs
 # just it: scheduler/slot-pool + admission/budget invariants, the
-# policy x backend x chunked parity matrix, reshard).  The matrix's
-# slowest cells (pallas, 8-device) are auto-marked slow by the conftest
-# guard; `make test-slow` runs them.
+# policy x backend x chunked parity matrix, reshard, and the shared-
+# prefix radix KV cache).  The slowest cells (pallas, 8-device) are
+# marked slow; `make test-slow` runs them.
 test-serve:
-	$(PY) -m pytest -q tests/test_serve.py tests/test_serve_sched.py
+	$(PY) -m pytest -q tests/test_serve.py tests/test_serve_sched.py \
+		tests/test_serve_prefix.py
 
 # Router API suite (part of tier-1): RouterSpec/registry semantics, the
 # deprecation shim, policy parity (noisy_topk/expert_choice), masking.
@@ -47,3 +48,8 @@ bench-micro:
 # several prompt/output mixes -> BENCH_serve.json.
 bench-serve:
 	$(PY) benchmarks/serve_bench.py
+
+# Just the shared-prefix radix-cache trace (serve_prefix_{off,on} rows,
+# merged into an existing BENCH_serve.json).
+bench-serve-prefix:
+	$(PY) benchmarks/serve_bench.py --prefix-only

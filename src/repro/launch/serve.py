@@ -67,6 +67,17 @@ def main():
                     help="aware = prompt-length-aware: skip queued "
                          "requests whose next chunk does not fit the "
                          "step's remaining prefill budget")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix radix KV cache: retired pages "
+                         "seed a prefix trie and later requests prefill "
+                         "only their uncached tail (requires "
+                         "--prefill-chunk; docs/serving.md)")
+    ap.add_argument("--prefix-cache-bytes", type=int, default=1 << 30,
+                    help="LRU byte budget for cached prefix pages "
+                         "(<= 0 = unlimited)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same N-token prompt "
+                         "prefix (exercises --prefix-cache)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -108,10 +119,17 @@ def main():
         prefill_buckets=not args.no_prefill_buckets,
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
-        admission=args.admission), ctx=ctx)
+        admission=args.admission,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_bytes=args.prefix_cache_bytes), ctx=ctx)
     rng = np.random.RandomState(0)
-    reqs = [engine.submit(rng.randint(1, cfg.vocab_size, (args.prompt_len,)),
-                          args.new_tokens, arrival=i * args.stagger)
+    shared = rng.randint(1, cfg.vocab_size,
+                         (min(args.shared_prefix, args.prompt_len),))
+    reqs = [engine.submit(
+                np.concatenate([shared, rng.randint(
+                    1, cfg.vocab_size,
+                    (args.prompt_len - shared.shape[0],))]),
+                args.new_tokens, arrival=i * args.stagger)
             for i in range(args.requests)]
     t0 = time.perf_counter()
     engine.run()
@@ -131,8 +149,17 @@ def main():
         print(f"[serve] chunked prefill: chunk={engine._chunk}, "
               f"budget={engine.sc.prefill_budget or 'unlimited'}, "
               f"admission={engine.sc.admission}, "
-              f"chunks={engine.stats['prefill_chunks']}, "
+              f"chunks={engine.stats['prefill_chunks']} in "
+              f"{engine.stats['prefill_calls']} calls, "
               f"offsets={sorted(engine.chunk_offsets)}")
+    if engine.prefix is not None:
+        ps = engine.prefix.stats
+        print(f"[serve] prefix cache: {ps['hits']} hits / "
+              f"{ps['hits'] + ps['misses']} lookups, "
+              f"{ps['hit_tokens']} prompt tokens reused, "
+              f"{engine.prefix.n_pages} pages "
+              f"({engine.prefix.bytes / 1e6:.1f} MB, "
+              f"{ps['evictions']} evictions)")
     if engine.telemetry:
         load = np.sum([t["expert_load"] for t in engine.telemetry], axis=0)
         over = engine.stats["overflow_total"]

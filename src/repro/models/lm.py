@@ -116,12 +116,14 @@ def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
                last_index=None, valid=None, start_pos: int | None = None):
     """Prompt ingestion. batch: tokens [B,S]. Returns (last_logits, cache).
 
-    Bucketed prefill (docs/serving.md): ``last_index`` (scalar) selects
-    the logits position — the true final prompt token when the prompt was
-    right-padded to a length bucket — and ``valid`` ([B, S]) masks the
-    padded tail out of MoE routing so padding can never displace real
-    tokens from expert capacity.  Defaults reproduce the exact-length
-    path (last position, everything valid).
+    Bucketed prefill (docs/serving.md): ``last_index`` (scalar, or a [B]
+    vector when rows end at different positions — cross-slot batched
+    chunk groups) selects the logits position — the true final prompt
+    token when the prompt was right-padded to a length bucket — and
+    ``valid`` ([B, S]) masks the padded tail out of MoE routing so
+    padding can never displace real tokens from expert capacity.
+    Defaults reproduce the exact-length path (last position, everything
+    valid).
 
     Chunked prefill: ``start_pos`` (a *static* int) ingests the prompt
     slice at absolute positions [start_pos, start_pos + S) against a
@@ -139,8 +141,14 @@ def lm_prefill(params, batch: dict, cache, cfg: ModelConfig,
     if last_index is None:
         x = x[:, -1:, :]
     else:
-        x = jax.lax.dynamic_slice_in_dim(
-            x, jnp.asarray(last_index, jnp.int32), 1, axis=1)
+        li = jnp.asarray(last_index, jnp.int32)
+        if li.ndim == 0:
+            x = jax.lax.dynamic_slice_in_dim(x, li, 1, axis=1)
+        else:
+            # Per-row final positions: a pure gather (vmapped slice), so a
+            # [1]-vector is bitwise-identical to the scalar path.
+            x = jax.vmap(lambda xi, lii: jax.lax.dynamic_slice_in_dim(
+                xi, lii, 1, axis=0))(x, li)
     x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     logits = logits_fn(params, x, cfg, ctx)[:, 0, :]
     return logits, new_cache

@@ -60,7 +60,7 @@ import numpy as np
 from repro.common import param as pm
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serve.kv_cache import SlotKVCache
+from repro.serve.kv_cache import PrefixCache, SlotKVCache
 from repro.serve.scheduler import Request, RequestQueue, Scheduler
 from repro.sharding import context as ctx_lib
 
@@ -118,6 +118,21 @@ class ServeConfig:
     # that does, so short prompts never queue behind a long head-of-line
     # prompt.
     admission: str = "fcfs"
+    # Shared-prefix radix KV cache (docs/serving.md §Shared-prefix KV
+    # cache): retired slot pages are inserted into a prefix trie keyed by
+    # prefill_chunk-token prompt blocks; a new request resumes from the
+    # longest cached block-aligned prefix and prefills only the tail.
+    # Requires chunked prefill (prefill_chunk > 0) — hits land on the
+    # chunk grid, so a resumed prefill replays the exact jitted chunk
+    # calls a cold one would and greedy outputs stay bit-identical with
+    # the cache on or off.  Architectures that refuse chunking
+    # (ssm/hybrid, sliding-window) also disable the prefix cache (with
+    # the same RuntimeWarning fallback).
+    prefix_cache: bool = False
+    # LRU byte budget for cached prefix pages (<= 0 = unlimited).
+    # Accounting charges the full per-page byte size for every entry;
+    # pinned entries (in-flight prefills) are never evicted.
+    prefix_cache_bytes: int = 1 << 30
 
 
 class ServeEngine:
@@ -161,6 +176,11 @@ class ServeEngine:
                         f"kv_block={cfg.kv_block} (and of q_block="
                         f"{cfg.q_block} when larger) so chunk boundaries "
                         "stay block-aligned with whole-prompt prefill")
+                if c > sc.max_len:
+                    raise ValueError(
+                        f"prefill_chunk={c} > max_len={sc.max_len}: even "
+                        "a single chunk's cache write would not fit the "
+                        "slot page")
                 if jnp.dtype(cfg.param_dtype) != jnp.dtype(
                         cfg.compute_dtype):
                     # The cached prefix K/V a chunk attends round-trips
@@ -178,6 +198,27 @@ class ServeEngine:
                         "bit-identical to whole-prompt prefill "
                         "(docs/serving.md)", RuntimeWarning, stacklevel=2)
                 self._chunk = c
+        # Shared-prefix cache: hits must land on the chunk grid (a resumed
+        # prefill replays the same jitted chunk calls a cold one would, so
+        # greedy outputs stay bit-identical) — hence it requires chunked
+        # prefill, and inherits the architecture fallback above.
+        self._prefix_on = False
+        if sc.prefix_cache:
+            if sc.prefill_chunk <= 0:
+                raise ValueError(
+                    "prefix_cache requires chunked prefill "
+                    "(prefill_chunk > 0): cache hits resume mid-prompt "
+                    "on the chunk grid — whole-prompt prefill has no "
+                    "resume path (docs/serving.md)")
+            if self._chunk == 0:
+                import warnings
+                warnings.warn(
+                    "prefix cache disabled: this architecture refused "
+                    "chunked prefill (ssm/sliding-window), and prefix "
+                    "hits can only resume through the chunk path "
+                    "(docs/serving.md)", RuntimeWarning, stacklevel=2)
+            else:
+                self._prefix_on = True
         self._prefill = jax.jit(
             lambda p, b, c, li, v: lm.lm_prefill(p, b, c, cfg,
                                                  ctx=self.prefill_ctx,
@@ -212,11 +253,26 @@ class ServeEngine:
         # are never mutated in place, so sharing is safe).
         self._blank_page = pm.materialize(self.kv.seq_defs,
                                           jax.random.PRNGKey(0))
+        # Shared-prefix radix cache over retired pages.  Page byte size is
+        # the dense per-sequence page (every leaf of seq_defs) — uniform,
+        # so LRU accounting is a multiple of one constant.
+        self.prefix: PrefixCache | None = None
+        self._pins: dict[int, object] = {}   # rid -> pinned trie entry
+        if self._prefix_on:
+            page_bytes = sum(
+                int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+                for leaf in jax.tree_util.tree_leaves(self._blank_page))
+            self.prefix = PrefixCache(
+                block=self._chunk, page_bytes=page_bytes,
+                max_bytes=self.sc.prefix_cache_bytes)
         self.queue = RequestQueue()
-        self.sched = Scheduler(self.sc.n_slots, policy=self.sc.policy,
-                               admission=self.sc.admission,
-                               prefill_chunk=self._chunk,
-                               prefill_budget=self.sc.prefill_budget)
+        self.sched = Scheduler(
+            self.sc.n_slots, policy=self.sc.policy,
+            admission=self.sc.admission,
+            prefill_chunk=self._chunk,
+            prefill_budget=self.sc.prefill_budget,
+            prefix_probe=self._prefix_probe if self._prefix_on else None,
+            on_admit=self._on_admit if self._prefix_on else None)
         self.step_count = 0
         self.telemetry: list[dict] = []
         self.prefill_lengths: set[int] = set()   # distinct compiled shapes
@@ -224,11 +280,23 @@ class ServeEngine:
         self.stats = {"prefills": 0, "decode_steps": 0, "reshards": 0,
                       "generated_tokens": 0, "slot_steps_active": 0,
                       "slot_steps_total": 0, "overflow_total": 0.0,
-                      "prefill_chunks": 0, "prefill_tokens": 0}
+                      "prefill_chunks": 0, "prefill_tokens": 0,
+                      # device prefill calls: < prefill_chunks when
+                      # cross-slot chunk batching groups same-offset
+                      # work-items into one multi-row call
+                      "prefill_calls": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0}
 
     def submit(self, prompt, max_new_tokens: int, arrival: int = 0
                ) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            # The engine samples a first token unconditionally when a
+            # prefill completes, so a zero budget would still return one
+            # token (off-by-one); reject at the front door instead.
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}: "
+                "prefill always samples the first token")
         if prompt.shape[0] + max_new_tokens > self.sc.max_len:
             raise ValueError(
                 f"prompt ({prompt.shape[0]}) + max_new_tokens "
@@ -297,6 +365,15 @@ class ServeEngine:
         if req.done:
             req.finished_step = self.step_count
             self.sched.retire(slot)
+            if self.prefix is not None and not self.prefix.covered(
+                    req.prompt):
+                # Retirement feeds the trie: the slot page's prompt span
+                # [0, prompt_len) is canonical chunk-prefill output (KV
+                # the decode steps wrote lives at positions >= prompt_len
+                # — inside the page but outside any possible hit, so it
+                # rides along inert).  covered() keeps the hot path free
+                # of extracts when the prefix is already cached.
+                self.prefix.insert(req.prompt, self.kv.extract(slot))
             self.kv.release(slot)
 
     def _bucket_len(self, plen: int) -> int:
@@ -338,15 +415,42 @@ class ServeEngine:
             self.stats["reshards"] += 1
         self.kv.insert(slot, page, req.prompt_len)
         self.stats["prefills"] += 1
+        self.stats["prefill_calls"] += 1
         self.stats["prefill_tokens"] += plen
         req.prefill_pos = plen
         req.first_token_step = self.step_count
         tok = self._sample_rows(logits, [req])[0]
         self._append_token(req, tok, slot)
 
+    # -- shared-prefix cache hooks ----------------------------------------
+    def _prefix_probe(self, req: Request) -> int:
+        """Scheduler hook: cached-prefix length a new request would resume
+        from (admission charges only the uncached tail)."""
+        return self.prefix.probe(req.prompt)
+
+    def _on_admit(self, slot: int, req: Request) -> None:
+        """Scheduler hook, fired the moment a request claims a slot:
+        alias the longest cached block-aligned prefix page into the slot
+        (staged, exactly like a partial chunked-prefill page) and advance
+        ``prefill_pos`` so chunk planning covers only the tail.  The trie
+        entry stays pinned until the prefill completes."""
+        hit, page, entry = self.prefix.lookup(req.prompt)
+        if hit <= 0:
+            return
+        self._pins[req.rid] = entry
+        req.prefill_pos = hit
+        # Zero-copy alias: jax pages are immutable, so staging the cached
+        # page is safe — the tail chunk's cache update materializes the
+        # "copy" as fresh arrays.
+        self.kv.append(slot, page, hit, last=False)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += hit
+
     # -- chunked prefill ---------------------------------------------------
     def _chunk_fn(self, off: int):
-        """Jitted prefill for one chunk offset (static start_pos)."""
+        """Jitted prefill for one chunk offset (static start_pos).  One
+        function object per offset; jit itself specializes per [G, C]
+        batch shape, so grouped calls of different widths coexist."""
         fn = self._chunk_fns.get(off)
         if fn is None:
             fn = jax.jit(lambda p, b, c, li, v, _o=off: lm.lm_prefill(
@@ -355,44 +459,101 @@ class ServeEngine:
             self._chunk_fns[off] = fn
         return fn
 
-    def _run_chunks(self, slot: int, req: Request, items: list) -> None:
-        """Ingest this step's chunk work-items for one slot (consecutive
-        prompt ranges, each resuming where the previous ended).  The
-        in-flight page is *staged* in the SlotKVCache between steps and
-        folded into the pool only by the completing chunk group — a
-        mid-prefill slot never decodes, so per-chunk pool blends (and
-        on-mesh reshards) would be pure hot-path overhead.  The final
-        chunk completes the prompt and samples the first token."""
+    def _resume_page(self, slot: int):
+        """Base page a slot's next chunk resumes from: the staged
+        in-flight page, else blank.  Explicit ``is None`` — ``staged(...)
+        or blank`` would ask the page pytree for truthiness, which
+        raises on bare jax-array leaves and silently restarts the
+        prefill for empty-container ones."""
+        page = self.kv.staged(slot)
+        return self._blank_page if page is None else page
+
+    def _run_chunk_rounds(self, by_slot: dict) -> None:
+        """Ingest this step's chunk work-items, batching across slots.
+
+        Each slot's items are consecutive prompt ranges that must run in
+        order (chunk N+1 resumes chunk N's page), but items of *different*
+        slots are independent — so the step runs in rounds: every slot's
+        head item, with same-offset heads grouped into one multi-row
+        prefill call (``_run_chunk_group``).  Under a per-step budget most
+        slots carry exactly one chunk, so a round typically batches the
+        whole step's chunk work into one or two device calls."""
+        queues = {slot: list(items) for slot, items in by_slot.items()}
+        while queues:
+            heads: dict[int, list] = {}
+            for slot in sorted(queues):
+                w = queues[slot][0]
+                heads.setdefault(w.start, []).append((slot, w))
+            for off in sorted(heads):
+                self._run_chunk_group(off, heads[off])
+            for slot in list(queues):
+                queues[slot].pop(0)
+                if not queues[slot]:
+                    del queues[slot]
+
+    def _run_chunk_group(self, off: int, group: list) -> None:
+        """One multi-row prefill call for same-offset chunk work-items of
+        ``len(group)`` different slots.  Rows are padded to a power-of-two
+        batch (pad rows: blank page, all-zero validity — masked out of
+        routing exactly like dead decode slots).  In-flight pages stay
+        *staged* in the SlotKVCache between steps and fold into the pool
+        only on the completing chunk — a mid-prefill slot never decodes,
+        so per-chunk pool blends (and on-mesh reshards) would be pure
+        hot-path overhead.  Completing rows sample their first token."""
         c = self._chunk
-        page = self.kv.staged(slot) or self._blank_page
-        logits = None
-        for w in items:
-            chunk = np.zeros((c,), np.int32)
-            chunk[:w.length] = req.prompt[w.start:w.start + w.length]
-            valid = np.zeros((1, c), np.float32)
-            valid[0, :w.length] = 1.0
-            self.chunk_offsets.add(w.start)
-            # Chunk-local index of the final prompt token (only read on
-            # the last chunk; clamped elsewhere).
-            li = min(req.prompt_len - 1 - w.start, c - 1)
-            logits, page = self._chunk_fn(w.start)(
-                self.params, {"tokens": jnp.asarray(chunk)[None, :]}, page,
-                jnp.asarray(li, jnp.int32), jnp.asarray(valid))
+        g = len(group)
+        gp = 1 << (g - 1).bit_length()          # power-of-two batch bucket
+        tokens = np.zeros((gp, c), np.int32)
+        valid = np.zeros((gp, c), np.float32)
+        li = np.full((gp,), c - 1, np.int32)    # pad rows: clamped, unread
+        pages = []
+        for i, (slot, w) in enumerate(group):
+            req = w.req
+            tokens[i, :w.length] = req.prompt[w.start:w.start + w.length]
+            valid[i, :w.length] = 1.0
+            # Chunk-local index of the final prompt token (only read on a
+            # row's last chunk; clamped elsewhere).
+            li[i] = min(req.prompt_len - 1 - off, c - 1)
+            pages.append(self._resume_page(slot))
+        pages.extend([self._blank_page] * (gp - g))
+        page_in = pages[0] if gp == 1 else self.kv.stack_pages(pages)
+        self.chunk_offsets.add(off)
+        logits, page_out = self._chunk_fn(off)(
+            self.params, {"tokens": jnp.asarray(tokens)}, page_in,
+            jnp.asarray(li), jnp.asarray(valid))
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_chunks"] += g
+        out_pages = ([page_out] if gp == 1
+                     else self.kv.split_pages(page_out, g))
+        rows: list[Request | None] = [None] * gp
+        done_rows = []
+        for i, (slot, w) in enumerate(group):
+            req = w.req
             req.prefill_pos = w.start + w.length
-            self.stats["prefill_chunks"] += 1
             self.stats["prefill_tokens"] += w.length
-        done = not req.prefilling
-        if done and self.ctx.mesh is not None:
-            # the staged pages stayed on the prefill plan; the finished
-            # page reshards once, exactly like a whole-prompt page.
-            page = self.decode_ctx.reshard(page, self.kv.seq_defs)
-            self.stats["reshards"] += 1
-        self.kv.append(slot, page, req.prefill_pos, last=done)
-        if done:
-            self.stats["prefills"] += 1
-            req.first_token_step = self.step_count
-            tok = self._sample_rows(logits, [req])[0]
-            self._append_token(req, tok, slot)
+            page = out_pages[i]
+            done = not req.prefilling
+            if done and self.ctx.mesh is not None:
+                # staged pages stayed on the prefill plan; each finished
+                # page reshards once, exactly like a whole-prompt page.
+                page = self.decode_ctx.reshard(page, self.kv.seq_defs)
+                self.stats["reshards"] += 1
+            self.kv.append(slot, page, req.prefill_pos, last=done)
+            if done:
+                self.stats["prefills"] += 1
+                req.first_token_step = self.step_count
+                if self.prefix is not None:
+                    entry = self._pins.pop(req.rid, None)
+                    if entry is not None:
+                        # the tail chunks no longer read the cached base
+                        # page — the entry is evictable again.
+                        self.prefix.unpin(entry)
+                rows[i] = req
+                done_rows.append((i, slot, req))
+        if done_rows:
+            toks = self._sample_rows(logits, rows)
+            for i, slot, req in done_rows:
+                self._append_token(req, toks[i], slot)
 
     def step(self) -> int:
         """One engine step: plan prefill work (admission + chunks under
@@ -401,12 +562,17 @@ class ServeEngine:
         slots that were active in the decode."""
         by_slot: dict[int, list] = {}
         for w in self.sched.schedule_prefill(self.queue, self.step_count):
-            if w.start == 0 and w.length == w.req.prompt_len:
+            if (not self._prefix_on and w.start == 0
+                    and w.length == w.req.prompt_len):
                 self._start(w.slot, w.req)   # whole prompt: bucketed path
             else:
+                # With the prefix cache on, even single-chunk prompts take
+                # the chunk path: every cached page must be built from the
+                # canonical same-offset chunk calls, or a later resumed
+                # prefill would mix pages from differently-shaped jits and
+                # forfeit bit-identity with the cache off.
                 by_slot.setdefault(w.slot, []).append(w)
-        for slot, items in by_slot.items():
-            self._run_chunks(slot, items[0].req, items)
+        self._run_chunk_rounds(by_slot)
         active = self.sched.decoding()
         if active:
             n = self.sc.n_slots

@@ -3,7 +3,7 @@
 ``transformer.cache_defs(cfg, n_slots, max_len)`` declares one cache page
 per slot (KV ring/full buffers for attention layers, conv/ssm state for
 mamba layers), stacked on the batch axis.  This module owns that pool and
-the three slot operations the scheduler needs:
+the slot operations the scheduler needs:
 
 * ``insert(slot, seq_cache, length)`` — blend a freshly prefilled batch-1
   cache (already resharded onto the decode plan — see
@@ -16,9 +16,19 @@ the three slot operations the scheduler needs:
   length bookkeeping reset).
 * ``compact(perm)`` — permute slots (gather over the batch axis), e.g. to
   pack active slots into a prefix before shrinking the pool.
+* ``extract(slot)`` — gather one slot back out as a batch-1 page (the
+  retirement path of the shared-prefix cache re-inserts finished pages).
+* ``stack_pages`` / ``split_pages`` — concatenate G batch-1 pages into one
+  [G, ...] page and slice it back apart: the cross-slot batched prefill
+  runs one multi-row chunk call over same-offset work-items from
+  different slots.
 
 The batch axis is located *per leaf* from the ParamDef axes — stacked
 period leaves carry a leading "layers" axis, tail leaves do not.
+
+This module also owns :class:`PrefixCache`, the refcounted radix
+(prefix-trie) cache of finished pages behind shared-prefix KV reuse
+(docs/serving.md §Shared-prefix KV cache).
 """
 from __future__ import annotations
 
@@ -64,6 +74,29 @@ def _evict_op(cache_leaves, slot, *, axes):
 def _compact_op(cache_leaves, perm, *, axes):
     return tuple(jnp.take(a, perm, axis=ax)
                  for ax, a in zip(axes, cache_leaves))
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _extract_op(cache_leaves, slot, *, axes):
+    return tuple(jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
+                 for ax, a in zip(axes, cache_leaves))
+
+
+@functools.partial(jax.jit, static_argnames=("axes",))
+def _stack_op(page_leaves, *, axes):
+    # page_leaves: per-page leaf tuples; concatenate each leaf position
+    # over the batch axis (G batch-1 pages -> one batch-G page).
+    return tuple(jnp.concatenate([p[i] for p in page_leaves], axis=ax)
+                 for i, ax in enumerate(axes))
+
+
+@functools.partial(jax.jit, static_argnames=("axes", "g"))
+def _split_op(batched_leaves, *, axes, g):
+    # Inverse of _stack_op: G per-page leaf tuples from one batch-G page
+    # (static indices — a plain slice, no gather).
+    return tuple(tuple(jax.lax.slice_in_dim(a, i, i + 1, axis=ax)
+                       for ax, a in zip(axes, batched_leaves))
+                 for i in range(g))
 
 
 class SlotKVCache:
@@ -123,9 +156,16 @@ class SlotKVCache:
         completing chunk group) folds the finished page into the pool:
         one full-pool blend per prompt.  ``length`` must grow
         monotonically while a prompt is in flight.
+
+        A shrinking ``length`` means the caller is replaying an earlier
+        chunk over a later page — KV corruption, not a recoverable state
+        — so the guard is a real exception (an ``assert`` would vanish
+        under ``python -O`` and turn it into silent wrong output).
         """
-        assert length >= self.lengths[slot], \
-            f"append shrank slot {slot}: {length} < {self.lengths[slot]}"
+        if length < self.lengths[slot]:
+            raise ValueError(
+                f"append shrank slot {slot}: {length} < "
+                f"{self.lengths[slot]} (chunk replayed over a later page)")
         if last:
             self.insert(slot, seq_cache, length)
         else:
@@ -154,10 +194,260 @@ class SlotKVCache:
         """Permute slots: page i of the new pool is page perm[i] of the
         old one (gather over the batch axis, shard-local under GSPMD)."""
         perm = np.asarray(perm)
-        assert sorted(perm.tolist()) == list(range(self.n_slots)), perm
+        if sorted(perm.tolist()) != list(range(self.n_slots)):
+            # Not a permutation: the gather would duplicate one page and
+            # drop another — silent KV corruption under `python -O` if
+            # this were an assert.
+            raise ValueError(f"compact perm {perm} is not a permutation "
+                             f"of range({self.n_slots})")
         self.cache = self._unflatten(_compact_op(
             self._leaves(self.cache), jnp.asarray(perm, jnp.int32),
             axes=self._axes_flat))
         self.lengths = self.lengths[perm]
         self._staged = {i: self._staged[int(p)] for i, p in enumerate(perm)
                         if int(p) in self._staged}
+
+    def extract(self, slot: int):
+        """Gather one slot back out of the pool as a batch-1 page (the
+        ``seq_defs`` layout insert consumes) — the retirement path of the
+        shared-prefix cache re-inserts a finished slot's page into the
+        prefix trie.  jax arrays are immutable, so the extracted page
+        aliases the pool's buffers safely: later inserts into the slot
+        build new pool arrays and never mutate the extracted view."""
+        return self._unflatten(_extract_op(
+            self._leaves(self.cache), jnp.int32(slot),
+            axes=self._axes_flat))
+
+    def stack_pages(self, pages: list):
+        """Concatenate G batch-1 pages into one batch-G page — the input
+        of a cross-slot batched chunk-prefill call (each row resumes a
+        different slot's in-flight prefix)."""
+        return self._unflatten(_stack_op(
+            tuple(self._leaves(p) for p in pages), axes=self._axes_flat))
+
+    def split_pages(self, batched, g: int) -> list:
+        """Slice a batch-G page back into G batch-1 pages (rows of a
+        batched chunk call scatter into their own slots).  Inverse of
+        :meth:`stack_pages`; rows past ``g`` (power-of-two padding) are
+        dropped."""
+        return [self._unflatten(leaves) for leaves in _split_op(
+            self._leaves(batched), axes=self._axes_flat, g=g)]
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix radix cache (docs/serving.md §Shared-prefix KV cache)
+# ---------------------------------------------------------------------------
+
+class _TrieNode:
+    """One prompt block (``block`` tokens) on a radix path.  ``entry`` is
+    the cached page covering the prompt prefix [0, depth*block) — multiple
+    nodes on one path may share the same entry (a deep page covers every
+    shallower prefix on its own path)."""
+
+    __slots__ = ("key", "parent", "children", "entry", "depth")
+
+    def __init__(self, key: bytes | None, parent: "_TrieNode | None"):
+        self.key = key
+        self.parent = parent
+        self.children: dict[bytes, _TrieNode] = {}
+        self.entry: _PageEntry | None = None
+        self.depth = 0 if parent is None else parent.depth + 1
+
+
+class _PageEntry:
+    """One cached page and its bookkeeping: the trie nodes that alias it,
+    the pin refcount (in-flight prefills reading the page), and the LRU
+    tick.  Pinned entries are never evicted."""
+
+    __slots__ = ("page", "nodes", "pins", "tick")
+
+    def __init__(self, page, nodes: list, tick: int):
+        self.page = page
+        self.nodes = nodes
+        self.pins = 0
+        self.tick = tick
+
+
+class PrefixCache:
+    """Refcounted, block-aligned radix cache of finished KV pages.
+
+    The trie is keyed by ``block``-token prompt blocks (the serving engine
+    passes its chunk size, itself a multiple of ``kv_block``, so hits land
+    on the chunk grid and a resumed prefill replays the *same* jitted
+    chunk calls a cold prefill would — the bit-identity argument in
+    docs/serving.md).  ``lookup`` pins the longest cached block-aligned
+    prefix strictly shorter than the prompt — the tail always keeps >= 1
+    token, because only a freshly computed final chunk yields the logits
+    that sample the first token.
+
+    Aliasing vs copying: pages are immutable jax pytrees, so a hit hands
+    the caller the cached page itself (zero-copy alias); the "copy"
+    materializes only when the tail chunk's cache update builds new
+    arrays.  Pins therefore do not protect memory (Python refcounts do) —
+    they are the accounting that makes eviction observable and testable:
+    an entry is evictable iff no admitted request is still prefilling on
+    top of it.
+
+    Eviction: LRU over entries under ``max_bytes`` (``<= 0`` = unlimited),
+    ``page_bytes`` charged per stored page.  Freeing an entry detaches it
+    from every aliasing node and prunes childless, entryless nodes so the
+    trie cannot grow without bound.
+
+    Pages are opaque objects — the class never touches jax, so the
+    property suite drives it host-only with token arrays and sentinel
+    pages.
+    """
+
+    def __init__(self, block: int, page_bytes: int, max_bytes: int = 0):
+        if block <= 0:
+            raise ValueError(f"block must be positive, got {block}")
+        self.block = block
+        self.page_bytes = int(page_bytes)
+        self.max_bytes = int(max_bytes)
+        self.root = _TrieNode(None, None)
+        self._entries: list[_PageEntry] = []
+        self._tick = 0
+        self.stats = {"hits": 0, "misses": 0, "hit_tokens": 0,
+                      "inserts": 0, "evictions": 0}
+
+    # -- bookkeeping ------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return len(self._entries)
+
+    @property
+    def bytes(self) -> int:
+        return len(self._entries) * self.page_bytes
+
+    def _keys(self, prompt, n_blocks: int) -> list[bytes]:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        b = self.block
+        return [prompt[i * b:(i + 1) * b].tobytes()
+                for i in range(n_blocks)]
+
+    def _walk(self, prompt, n_blocks: int):
+        """Deepest entry on the prompt's path within ``n_blocks`` blocks:
+        ``(entry, depth_in_blocks)`` — ``(None, 0)`` when nothing on the
+        path is cached."""
+        node, best, depth = self.root, None, 0
+        for key in self._keys(prompt, n_blocks):
+            node = node.children.get(key)
+            if node is None:
+                break
+            if node.entry is not None:
+                best, depth = node.entry, node.depth
+        return best, depth
+
+    # -- read path --------------------------------------------------------
+    def probe(self, prompt) -> int:
+        """Hit length (tokens) a :meth:`lookup` would return, without
+        pinning — the scheduler's prefix-aware admission charges only the
+        uncached tail against the prefill budget."""
+        plen = int(np.asarray(prompt).shape[-1])
+        _, depth = self._walk(prompt, (plen - 1) // self.block)
+        return depth * self.block
+
+    def lookup(self, prompt):
+        """Longest cached block-aligned strict-prefix of ``prompt``.
+
+        Returns ``(hit_tokens, page, entry)`` — ``(0, None, None)`` on a
+        miss.  The entry is *pinned* (refcount +1); the caller must
+        :meth:`unpin` it once its prefill no longer reads the page.  The
+        hit is capped at ``((plen - 1) // block) * block`` so the tail
+        keeps at least one token to recompute.
+        """
+        plen = int(np.asarray(prompt).shape[-1])
+        best, depth = self._walk(prompt, (plen - 1) // self.block)
+        if best is None:
+            self.stats["misses"] += 1
+            return 0, None, None
+        self._tick += 1
+        best.tick = self._tick
+        best.pins += 1
+        hit = depth * self.block
+        self.stats["hits"] += 1
+        self.stats["hit_tokens"] += hit
+        return hit, best.page, best
+
+    def unpin(self, entry: _PageEntry) -> None:
+        if entry.pins <= 0:
+            raise ValueError("unpin would drive a refcount negative "
+                             "(double unpin of a prefix-cache entry)")
+        entry.pins -= 1
+
+    # -- write path -------------------------------------------------------
+    def covered(self, prompt) -> bool:
+        """True when every block of the prompt's aligned prefix already
+        has a cached entry — the retirement hot path probes this before
+        paying for a device->trie page extract."""
+        plen = int(np.asarray(prompt).shape[-1])
+        n_blocks = plen // self.block
+        if n_blocks == 0:
+            return True
+        node = self.root
+        for key in self._keys(prompt, n_blocks):
+            node = node.children.get(key)
+            if node is None or node.entry is None:
+                return False
+        return True
+
+    def insert(self, prompt, page) -> int:
+        """Cache ``page`` (KV for prompt positions [0, plen) — decode
+        positions past the prompt ride along inert, a hit never exposes
+        them) under the prompt's block-aligned prefix.  Only nodes without
+        an entry adopt the page; fully covered prefixes store nothing
+        (returns 0) so duplicate retirements are free.  Returns the
+        number of newly covered blocks."""
+        plen = int(np.asarray(prompt).shape[-1])
+        n_blocks = plen // self.block
+        if n_blocks == 0:
+            return 0
+        node, missing = self.root, []
+        self._tick += 1
+        for key in self._keys(prompt, n_blocks):
+            child = node.children.get(key)
+            if child is None:
+                child = _TrieNode(key, node)
+                node.children[key] = child
+            if child.entry is None:
+                missing.append(child)
+            else:
+                child.entry.tick = self._tick   # touch: path is hot
+            node = child
+        if not missing:
+            return 0
+        entry = _PageEntry(page, missing, self._tick)
+        for n in missing:
+            n.entry = entry
+        self._entries.append(entry)
+        self.stats["inserts"] += 1
+        self._evict_to_budget()
+        return len(missing)
+
+    # -- eviction ---------------------------------------------------------
+    def _evict_to_budget(self) -> None:
+        if self.max_bytes <= 0:
+            return
+        while self.bytes > self.max_bytes:
+            victims = [e for e in self._entries if e.pins == 0]
+            if not victims:
+                return      # everything pinned: overshoot, never corrupt
+            self._free(min(victims, key=lambda e: e.tick))
+            self.stats["evictions"] += 1
+
+    def _free(self, entry: _PageEntry) -> None:
+        self._entries.remove(entry)
+        for node in entry.nodes:
+            node.entry = None
+            self._prune(node)
+        entry.nodes = []
+        entry.page = None
+
+    def _prune(self, node: _TrieNode) -> None:
+        """Drop childless, entryless nodes bottom-up so evicted paths do
+        not leak trie nodes."""
+        while (node is not None and node.parent is not None
+               and not node.children and node.entry is None):
+            parent = node.parent
+            del parent.children[node.key]
+            node = parent

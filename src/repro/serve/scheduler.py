@@ -122,11 +122,26 @@ class Scheduler:
     ``prefill_chunk``: chunk size in tokens (0 = whole-prompt prefill).
     ``prefill_budget``: max prompt tokens planned per engine step
     (0 = unlimited).  ``admission``: "fcfs" | "aware" (see module doc).
+
+    Shared-prefix hooks (both optional — the engine wires them when its
+    prefix cache is on):
+
+    * ``prefix_probe(req) -> int`` — cached-prefix length (tokens) a new
+      request would resume from.  Admission cost accounting uses it so
+      the "aware" fits-predicate charges only the *uncached tail* against
+      the budget: a long prompt whose prefix is cached competes like the
+      short prompt it effectively is.
+    * ``on_admit(slot, req)`` — called the moment a request claims a
+      slot, *before* its chunks are planned.  The engine's hook performs
+      the prefix-cache lookup, pins the entry, stages the cached page
+      into the slot and advances ``req.prefill_pos`` to the hit length —
+      so chunk planning (and the budget) naturally sees only the tail.
     """
 
     def __init__(self, n_slots: int, policy: str = "continuous", *,
                  admission: str = "fcfs", prefill_chunk: int = 0,
-                 prefill_budget: int = 0):
+                 prefill_budget: int = 0, prefix_probe=None,
+                 on_admit=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown scheduling policy {policy!r}")
         if admission not in ("fcfs", "aware"):
@@ -141,6 +156,8 @@ class Scheduler:
         self.admission = admission
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget
+        self.prefix_probe = prefix_probe
+        self.on_admit = on_admit
         self.slots: list[Request | None] = [None] * n_slots
         self.admitted = 0
         self.retired = 0
@@ -162,8 +179,15 @@ class Scheduler:
 
     # -- per-step prefill planning ---------------------------------------
     def _next_cost(self, req: Request) -> int:
-        """Prompt tokens the request's next work-item ingests."""
-        remaining = req.prompt_len - req.prefill_pos
+        """Prompt tokens the request's next work-item ingests.  For a
+        not-yet-admitted request with a cached prefix, the first work-item
+        starts at the hit position (``on_admit`` advances ``prefill_pos``
+        there), so the cost is charged from the probe result — only the
+        uncached tail counts against the budget."""
+        pos = req.prefill_pos
+        if self.prefix_probe is not None and req.admitted_step is None:
+            pos = max(pos, self.prefix_probe(req))
+        remaining = req.prompt_len - pos
         if self.prefill_chunk <= 0:
             return remaining
         return min(self.prefill_chunk, remaining)
@@ -230,6 +254,11 @@ class Scheduler:
                 req.admitted_step = step
                 self.slots[slot] = req
                 self.admitted += 1
+                if self.on_admit is not None:
+                    # Prefix-cache hook: may stage a cached page and
+                    # advance req.prefill_pos past the hit, so the chunk
+                    # plan below covers only the uncached tail.
+                    self.on_admit(slot, req)
                 items, spent = self._emit_chunks(slot, req, planned,
                                                  spent, budget)
                 out.extend(items)
@@ -250,7 +279,11 @@ class Scheduler:
 
     def retire(self, slot: int) -> Request:
         req = self.slots[slot]
-        assert req is not None, f"retire of empty slot {slot}"
+        if req is None:
+            # A double retire desynchronizes admitted/retired accounting
+            # and could free another request's slot — a real exception,
+            # not an assert that `python -O` strips.
+            raise ValueError(f"retire of empty slot {slot}")
         self.slots[slot] = None
         self.retired += 1
         return req

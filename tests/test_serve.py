@@ -148,7 +148,8 @@ def test_kv_cache_append_stages_partial_pages(moe_setup):
     assert kv.staged(0) is not None and kv.lengths[0] == 8
     for a, b in zip(pool_before, jax.tree_util.tree_leaves(kv.cache)):
         assert a is b                        # pool untouched while staged
-    with pytest.raises(AssertionError):      # monotonic growth
+    with pytest.raises(ValueError, match="shrank"):   # monotonic growth —
+        # a real exception (not an assert): must survive `python -O`
         kv.append(0, page(2.0), length=4, last=False)
     kv.append(0, page(2.0), length=16, last=True)
     assert kv.staged(0) is None and kv.lengths[0] == 16

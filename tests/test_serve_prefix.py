@@ -1,0 +1,555 @@
+"""Shared-prefix radix KV cache + cross-slot batched prefill.
+
+Three layers of coverage:
+
+* ``PrefixCache`` host-only semantics: trie hits/caps/alignment, pinning,
+  LRU eviction under a byte budget, node pruning — plus a property suite
+  (hypothesis when installed, the parametrized grid otherwise) driving
+  random insert/lookup/unpin traces and checking the structural
+  invariants (refcounts never negative, eviction never frees a pinned
+  page, ``hit + tail == prompt_len`` with block-aligned hits, byte
+  accounting exact).
+* Engine integration: greedy outputs bit-identical {prefix cache on, off}
+  × {chunked, whole-prompt} against the sequential oracle, on 1 device
+  and (slow) an 8-device fake mesh; cross-slot chunk batching reduces
+  ``prefill_calls`` below ``prefill_chunks``; prefix-aware admission
+  charges only the uncached tail.
+* The serve-path bugfix sweep: ``max_new_tokens < 1`` rejected at
+  submit, staged-page resume uses an explicit ``is None`` (pytree
+  truthiness hazard), and the KV/scheduler invariants survive
+  ``python -O`` (real exceptions, not asserts).
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import param as pm
+from repro.configs.base import get_config
+from repro.models import lm
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.kv_cache import PrefixCache, SlotKVCache
+from repro.serve.scheduler import Request, RequestQueue, Scheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _moe_cfg():
+    return get_config("kimi-k2-1t-a32b").replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        vocab_size=64, n_experts=4, moe_k=2, moe_d_ff=32,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        q_block=16, kv_block=16, capacity_factor=2.0)
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = _moe_cfg()
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: host-only trie semantics (pages are opaque sentinels)
+# ---------------------------------------------------------------------------
+
+def test_prefix_trie_hit_cap_and_alignment():
+    pc = PrefixCache(block=4, page_bytes=10)
+    prompt = np.arange(14, dtype=np.int32)        # 3 full blocks + tail 2
+    assert pc.probe(prompt) == 0
+    assert pc.insert(prompt, "page0") == 3        # blocks [0,4), [4,8), [8,12)
+    assert pc.n_pages == 1 and pc.bytes == 10
+
+    # identical prompt: the hit is capped one block short of the aligned
+    # prefix when the prompt length is block-aligned — the tail must keep
+    # >= 1 token to produce the first-token logits.
+    aligned = np.arange(12, dtype=np.int32)
+    hit, page, entry = pc.lookup(aligned)
+    assert (hit, page) == (8, "page0") and hit % 4 == 0 and hit < 12
+    pc.unpin(entry)
+
+    # longer prompt sharing the prefix: full 3-block hit
+    longer = np.concatenate([np.arange(12), [99, 98]]).astype(np.int32)
+    hit, page, entry = pc.lookup(longer)
+    assert (hit, page) == (12, "page0")
+    assert hit + (longer.shape[0] - hit) == longer.shape[0]
+    pc.unpin(entry)
+
+    # diverging in block 2: only the shared blocks hit
+    div = np.concatenate([np.arange(8), [77, 77, 77, 77, 1]]).astype(np.int32)
+    assert pc.probe(div) == 8
+
+    # diverging immediately: miss
+    assert pc.probe(np.full(9, 55, np.int32)) == 0
+    assert pc.lookup(np.full(9, 55, np.int32)) == (0, None, None)
+
+    # sub-block prompts can never hit or be stored
+    assert pc.probe(np.arange(3, dtype=np.int32)) == 0
+    assert pc.insert(np.arange(3, dtype=np.int32), "tiny") == 0
+    assert pc.n_pages == 1
+
+
+def test_prefix_trie_insert_idempotent_and_covered():
+    pc = PrefixCache(block=4, page_bytes=10)
+    long = np.arange(16, dtype=np.int32)
+    short = np.arange(8, dtype=np.int32)
+    assert not pc.covered(long)
+    pc.insert(short, "p_short")                   # blocks 0,1
+    assert pc.covered(short) and not pc.covered(long)
+    assert pc.insert(long, "p_long") == 2         # only blocks 2,3 are new
+    assert pc.covered(long)
+    # fully covered: stores nothing (duplicate retirements are free)
+    assert pc.insert(long, "p_dup") == 0
+    assert pc.n_pages == 2
+    # deepest entry on the path wins the lookup
+    hit, page, e = pc.lookup(np.concatenate([long, [9]]).astype(np.int32))
+    assert (hit, page) == (16, "p_long")
+    pc.unpin(e)
+    # zero-length prompts are trivially covered
+    assert pc.covered(np.zeros(0, np.int32))
+
+
+def test_prefix_pins_block_eviction_lru_order():
+    pc = PrefixCache(block=4, page_bytes=10, max_bytes=20)   # 2 pages max
+    pa = np.arange(0, 8, dtype=np.int32)
+    pb = np.arange(8, 16, dtype=np.int32)
+    pc_prompt = np.arange(16, 24, dtype=np.int32)
+    pc.insert(pa, "A")
+    pc.insert(pb, "B")
+    assert pc.bytes == 20
+    hit, _, ea = pc.lookup(np.concatenate([pa, [1]]).astype(np.int32))
+    assert hit == 8 and ea.pins == 1
+
+    # over budget: LRU victim would be A (oldest tick) but it is pinned —
+    # B must be evicted instead, never the referenced page.
+    pc.insert(pc_prompt, "C")
+    assert pc.stats["evictions"] == 1
+    assert pc.probe(np.concatenate([pb, [1]]).astype(np.int32)) == 0
+    assert pc.probe(np.concatenate([pa, [1]]).astype(np.int32)) == 8
+    assert ea.page == "A"                        # pinned page survives
+
+    # unpinned: A becomes evictable; a third insert now evicts it (LRU)
+    pc.unpin(ea)
+    assert ea.pins == 0
+    with pytest.raises(ValueError, match="refcount"):
+        pc.unpin(ea)                             # double unpin
+    pc.insert(np.arange(24, 32, dtype=np.int32), "D")
+    assert pc.n_pages == 2 and pc.bytes == 20
+    assert pc.probe(np.concatenate([pa, [1]]).astype(np.int32)) == 0
+    # evicted paths prune their trie nodes (no leak)
+    assert len(pc.root.children) == 2            # C and D remain
+
+
+def test_prefix_eviction_overshoot_when_all_pinned():
+    pc = PrefixCache(block=2, page_bytes=10, max_bytes=30)
+    entries = []
+    for i in range(3):
+        p = np.arange(4 * i, 4 * i + 4, dtype=np.int32)
+        pc.insert(p, f"P{i}")
+        hit, page, e = pc.lookup(np.concatenate([p, [1]]).astype(np.int32))
+        assert (hit, page) == (4, f"P{i}")
+        entries.append(e)
+    pc.max_bytes = 10     # budget shrinks below the pinned working set
+    pc.insert(np.arange(100, 104, dtype=np.int32), "Q")
+    # the unpinned newcomer is the only victim; the three pinned pages
+    # overshoot the budget rather than corrupting an in-flight prefill
+    assert pc.n_pages == 3 and pc.bytes == 30
+    assert all(e.page == f"P{i}" for i, e in enumerate(entries))
+    for e in entries:
+        pc.unpin(e)
+    pc.insert(np.arange(200, 204, dtype=np.int32), "R")
+    assert pc.bytes <= 10
+
+
+# -- property suite (hypothesis-optional, same pattern as the scheduler) --
+
+def _simulate_prefix_ops(block, page_bytes, max_bytes, seed, n_ops=120):
+    """Random insert/lookup/unpin trace over a small block alphabet (to
+    force path sharing) with every structural invariant checked after
+    each op."""
+    rng = np.random.RandomState(seed)
+    pc = PrefixCache(block=block, page_bytes=page_bytes,
+                     max_bytes=max_bytes)
+    alphabet = [rng.randint(0, 5, (block,)).astype(np.int32)
+                for _ in range(4)]
+    pinned = []      # (entry, hit, prompt) held by "in-flight prefills"
+
+    def rand_prompt():
+        n_blocks = rng.randint(0, 6)
+        tail = rng.randint(1, block + 1)
+        parts = [alphabet[rng.randint(len(alphabet))]
+                 for _ in range(n_blocks)]
+        parts.append(rng.randint(0, 5, (tail,)).astype(np.int32))
+        return np.concatenate(parts)
+
+    lookups = 0
+    for _ in range(n_ops):
+        op = rng.randint(3)
+        if op == 0:                                   # retirement insert
+            pc.insert(rand_prompt(), object())
+        elif op == 1:                                 # admission lookup
+            prompt = rand_prompt()
+            probed = pc.probe(prompt)
+            hit, page, entry = pc.lookup(prompt)
+            lookups += 1
+            assert hit == probed                      # probe == lookup
+            if entry is None:
+                assert hit == 0 and page is None
+            else:
+                assert page is entry.page and page is not None
+                assert hit % block == 0               # block-aligned
+                assert 0 < hit < prompt.shape[0]      # tail >= 1 token
+                # hit + uncached tail reconstructs the whole prompt
+                assert hit + (prompt.shape[0] - hit) == prompt.shape[0]
+                pinned.append((entry, hit, prompt))
+        elif pinned:                                  # prefill completes
+            entry, _, _ = pinned.pop(rng.randint(len(pinned)))
+            pc.unpin(entry)
+        # -- invariants ------------------------------------------------
+        for entry, hit, prompt in pinned:
+            assert entry.pins >= 1                    # never negative
+            assert entry.page is not None             # never freed pinned
+            # the pinned page still serves at least the hit prefix
+            assert pc.probe(prompt) >= hit
+        assert pc.bytes == pc.n_pages * page_bytes    # exact accounting
+        if max_bytes > 0 and not pinned:
+            assert pc.bytes <= max_bytes              # budget honored
+        assert pc.stats["hits"] + pc.stats["misses"] == lookups
+    for entry, _, _ in pinned:
+        pc.unpin(entry)
+    pc.insert(rand_prompt(), object())                # trigger final evict
+    if max_bytes > 0:
+        assert pc.bytes <= max_bytes
+
+
+PREFIX_GRID = [
+    (4, 10, 0, 0),        # unlimited budget
+    (4, 10, 20, 1),       # tight: 2 pages
+    (2, 7, 7, 2),         # tighter: 1 page, small blocks
+    (8, 100, 300, 3),     # 3 pages, large blocks
+    (4, 10, 10, 4),       # 1 page, heavy eviction churn
+]
+
+
+@pytest.mark.parametrize("block,page_bytes,max_bytes,seed", PREFIX_GRID)
+def test_prefix_cache_invariants(block, page_bytes, max_bytes, seed):
+    _simulate_prefix_ops(block, page_bytes, max_bytes, seed)
+
+
+def test_prefix_cache_invariants_property():
+    pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis (dev req)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=60)
+    @given(block=st.sampled_from([2, 4, 8]),
+           page_bytes=st.integers(1, 100),
+           max_bytes=st.sampled_from([0, 10, 50, 200]),
+           seed=st.integers(0, 2 ** 16))
+    def prop(block, page_bytes, max_bytes, seed):
+        _simulate_prefix_ops(block, page_bytes, max_bytes, seed, n_ops=60)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# prefix-aware admission: the budget charges only the uncached tail
+# ---------------------------------------------------------------------------
+
+def test_aware_admission_charges_uncached_tail():
+    """With 8 tokens of leftover budget, an 80-token prompt whose first
+    72 tokens are cached admits (its next chunk is the 8-token tail);
+    without the cached prefix the same prompt is skipped."""
+    def build(probe_hit):
+        admitted = []
+        sched = Scheduler(
+            2, admission="aware", prefill_chunk=16, prefill_budget=24,
+            prefix_probe=lambda r: probe_hit,
+            on_admit=lambda slot, r: (
+                admitted.append((slot, r.rid)),
+                setattr(r, "prefill_pos", probe_hit)))
+        # slot 0 mid-prefill: its next chunk eats 16 of the 24 budget
+        inflight = Request(rid=0, prompt=np.zeros(48, np.int32),
+                           max_new_tokens=1)
+        inflight.prefill_pos = 16
+        inflight.admitted_step = 0
+        sched.slots[0] = inflight
+        q = RequestQueue()
+        q.push(Request(rid=1, prompt=np.zeros(80, np.int32),
+                       max_new_tokens=1))
+        return sched, q, admitted
+
+    sched, q, admitted = build(probe_hit=72)
+    work = sched.schedule_prefill(q, 1)
+    assert admitted == [(1, 1)]
+    # in-flight chunk + exactly the 8-token uncached tail
+    assert [(w.req.rid, w.start, w.length) for w in work] == \
+        [(0, 16, 16), (1, 72, 8)]
+    assert sum(w.length for w in work) <= 24
+
+    sched, q, admitted = build(probe_hit=0)
+    work = sched.schedule_prefill(q, 1)
+    assert admitted == [] and len(q) == 1      # full chunk doesn't fit
+    assert [(w.req.rid, w.start, w.length) for w in work] == [(0, 16, 16)]
+
+
+# ---------------------------------------------------------------------------
+# engine integration: bit-identical greedy parity, batching, eviction
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_trace(vocab: int, n: int = 5):
+    """Staggered arrivals: request 0 retires before the rest arrive, so
+    its page seeds the trie for every later request."""
+    rs = np.random.RandomState(3)
+    shared = rs.randint(1, vocab, (32,)).astype(np.int32)
+    return [(np.concatenate([shared,
+                             rs.randint(1, vocab, (8,)).astype(np.int32)]),
+             4, 0 if i == 0 else 12 + i) for i in range(n)]
+
+
+def test_engine_prefix_parity_and_hits(moe_setup):
+    """Greedy outputs bit-identical across {prefix on, off, tiny-budget
+    on} × {chunked} and the whole-prompt sequential oracle, with real
+    trie hits and a measurable prefill-token drop."""
+    cfg, params = moe_setup
+    trace = _shared_prefix_trace(cfg.vocab_size)
+    base = dict(max_len=64, n_slots=4, prefill_chunk=16,
+                prefill_budget=32, admission="aware")
+
+    def run(**kw):
+        eng = ServeEngine(params, cfg, ServeConfig(**base, **kw))
+        reqs = [eng.submit(p, m, arrival=a) for p, m, a in trace]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.tokens for r in reqs], eng
+
+    toks_off, eng_off = run()
+    toks_on, eng_on = run(prefix_cache=True)
+    assert toks_on == toks_off
+    assert eng_on.stats["prefix_hits"] == len(trace) - 1
+    assert eng_on.stats["prefix_hit_tokens"] == 32 * (len(trace) - 1)
+    assert eng_on.stats["prefill_tokens"] < eng_off.stats["prefill_tokens"]
+    assert eng_on.prefix.n_pages >= 1
+    # every pin released once its prefill completed
+    assert eng_on._pins == {}
+    assert all(e.pins == 0 for e in eng_on.prefix._entries)
+
+    # a one-page byte budget: the shared-prefix page just fits, hits
+    # still land, and the LRU accounting never exceeds the budget
+    page_bytes = eng_on.prefix.page_bytes
+    toks_tiny, eng_tiny = run(prefix_cache=True,
+                              prefix_cache_bytes=page_bytes)
+    assert toks_tiny == toks_off
+    assert eng_tiny.stats["prefix_hits"] > 0
+    assert eng_tiny.prefix.bytes <= page_bytes
+
+    # sequential whole-prompt oracle (no chunking, no prefix)
+    oracle = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=1))
+    for (p, m, _), toks in zip(trace, toks_on):
+        oracle.reset()
+        ref = oracle.submit(p, m)
+        oracle.run()
+        assert ref.tokens == toks
+
+
+def test_cross_slot_batched_prefill_reduces_calls(moe_setup):
+    """Four same-length prompts admitted the same step march through the
+    chunk offsets in lockstep: each round's same-offset chunks fuse into
+    one multi-row call, so prefill_calls << prefill_chunks — with greedy
+    outputs bit-identical to the sequential oracle."""
+    cfg, params = moe_setup
+    rs = np.random.RandomState(5)
+    prompts = [rs.randint(1, cfg.vocab_size, (32,)).astype(np.int32)
+               for _ in range(4)]
+    eng = ServeEngine(params, cfg, ServeConfig(
+        max_len=64, n_slots=4, prefill_chunk=16))
+    reqs = [eng.submit(p, 3) for p in prompts]
+    eng.run()
+    # 4 slots x 2 chunks each, grouped by offset into 2 calls
+    assert eng.stats["prefill_chunks"] == 8
+    assert eng.stats["prefill_calls"] == 2
+    assert eng.chunk_offsets == {0, 16}
+    oracle = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=1))
+    for p, req in zip(prompts, reqs):
+        oracle.reset()
+        ref = oracle.submit(p, 3)
+        oracle.run()
+        assert ref.tokens == req.tokens
+
+
+@pytest.mark.slow
+def test_engine_prefix_parity_8device():
+    """{prefix on, off} parity on a (data=2, model=4) fake mesh: batched
+    multi-row chunk calls and trie-aliased base pages keep greedy outputs
+    bit-identical, with still exactly one reshard per completed prompt."""
+    out = _run_subprocess("""
+        from repro.common import param as pm
+        from repro.configs.base import get_config
+        from repro.models import lm
+        from repro.serve.engine import ServeConfig, ServeEngine
+        from repro.sharding import context
+
+        cfg = get_config("kimi-k2-1t-a32b").replace(
+            n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=16,
+            vocab_size=64, n_experts=4, moe_k=2, moe_d_ff=32,
+            param_dtype=jnp.float32, compute_dtype=jnp.float32,
+            q_block=16, kv_block=16, capacity_factor=2.0)
+        params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+        mesh = context.make_mesh((2, 4), ("data", "model"))
+        ctx = context.MeshContext.for_mesh(mesh, "decode_std")
+        rs = np.random.RandomState(3)
+        shared = rs.randint(1, 64, (32,)).astype(np.int32)
+        trace = [(np.concatenate([shared,
+                                  rs.randint(1, 64, (8,)).astype(np.int32)]),
+                  4, 0 if i == 0 else 12 + i) for i in range(4)]
+
+        def run(**kw):
+            eng = ServeEngine(params, cfg, ServeConfig(
+                max_len=64, n_slots=4, prefill_chunk=16,
+                prefill_budget=32, admission="aware", **kw), ctx=ctx)
+            reqs = [eng.submit(p, m, arrival=a) for p, m, a in trace]
+            eng.run()
+            assert all(r.done for r in reqs)
+            return [r.tokens for r in reqs], eng
+
+        toks_off, eng_off = run()
+        toks_on, eng_on = run(prefix_cache=True)
+        assert toks_on == toks_off, (toks_off, toks_on)
+        assert eng_on.stats["prefix_hits"] == 3
+        # one reshard per completed prompt, cache on or off
+        assert eng_off.stats["reshards"] == eng_off.stats["prefills"] == 4
+        assert eng_on.stats["reshards"] == eng_on.stats["prefills"] == 4
+        assert eng_on.stats["prefill_tokens"] < eng_off.stats["prefill_tokens"]
+        print("PREFIX8_OK")
+    """)
+    assert "PREFIX8_OK" in out
+
+
+def _run_subprocess(body: str, n_devices: int = 8, optimize: bool = False
+                    ) -> str:
+    import textwrap
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={n_devices}")
+        import jax, jax.numpy as jnp, numpy as np
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cmd = [sys.executable] + (["-O"] if optimize else []) + ["-c", script]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# bugfix sweep regressions
+# ---------------------------------------------------------------------------
+
+def test_max_new_tokens_below_one_rejected(moe_setup):
+    """The engine unconditionally samples a first token when a prefill
+    completes, so max_new_tokens=0 used to return 1 token (off-by-one);
+    submit must reject it before the request enters the queue."""
+    cfg, params = moe_setup
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=32, n_slots=2))
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(np.arange(1, 9, dtype=np.int32), bad)
+    assert not eng.queue
+    req = eng.submit(np.arange(1, 9, dtype=np.int32), 1)
+    eng.run()
+    assert len(req.tokens) == 1
+
+
+def test_resume_page_uses_explicit_is_none(moe_setup):
+    """`staged(slot) or blank` asks the staged pytree for truthiness —
+    raising on bare multi-element jax-array leaves and silently
+    restarting the prefill for falsy containers.  The resume helper must
+    use an explicit ``is None`` check."""
+    cfg, params = moe_setup
+    eng = ServeEngine(params, cfg, ServeConfig(
+        max_len=32, n_slots=2, prefill_chunk=16))
+    # falsy-but-staged container page: must be returned, not replaced
+    eng.kv._staged[0] = {}
+    assert eng._resume_page(0) == {}
+    # bare multi-element array page: `or` would raise TypeError
+    arr = jnp.zeros((4,))
+    eng.kv._staged[0] = arr
+    assert eng._resume_page(0) is arr
+    del eng.kv._staged[0]
+    assert eng._resume_page(0) is eng._blank_page
+
+
+def test_serve_invariants_survive_python_O():
+    """append monotonicity, compact permutation and retire-empty-slot are
+    real exceptions: they must still raise under ``python -O`` (asserts
+    would be stripped, turning KV corruption into silent wrong output)."""
+    out = _run_subprocess("""
+        assert not __debug__, "must run under -O"
+        from repro.common import param as pm
+        from repro.configs.base import get_config
+        from repro.serve.kv_cache import SlotKVCache
+        from repro.serve.scheduler import Scheduler
+
+        sched = Scheduler(2)
+        try:
+            sched.retire(0)
+        except ValueError:
+            print("RETIRE_RAISES")
+
+        cfg = get_config("kimi-k2-1t-a32b").replace(
+            n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+            vocab_size=64, n_experts=4, moe_k=2, moe_d_ff=32,
+            param_dtype=jnp.float32, compute_dtype=jnp.float32,
+            q_block=16, kv_block=16)
+        kv = SlotKVCache(cfg, n_slots=2, max_len=32)
+        page = pm.materialize(kv.seq_defs, jax.random.PRNGKey(0))
+        kv.append(0, page, length=8, last=False)
+        try:
+            kv.append(0, page, length=4, last=False)
+        except ValueError:
+            print("APPEND_RAISES")
+        try:
+            kv.compact([0, 0])
+        except ValueError:
+            print("COMPACT_RAISES")
+    """, n_devices=1, optimize=True)
+    assert "RETIRE_RAISES" in out
+    assert "APPEND_RAISES" in out
+    assert "COMPACT_RAISES" in out
+
+
+def test_prefix_cache_requires_chunked_prefill(moe_setup):
+    cfg, params = moe_setup
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeEngine(params, cfg, ServeConfig(
+            max_len=32, n_slots=2, prefix_cache=True))
+
+
+def test_prefix_cache_disabled_with_chunk_fallback():
+    """ssm architectures refuse chunked prefill; the prefix cache rides
+    on the chunk grid, so it must disable loudly alongside it."""
+    cfg = get_config("falcon-mamba-7b").replace(
+        n_layers=2, d_model=32, vocab_size=64, ssm_d_state=4,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    with pytest.warns(RuntimeWarning, match="prefix cache disabled"):
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_len=32, n_slots=2, prefill_chunk=8, prefix_cache=True))
+    assert eng._chunk == 0 and eng.prefix is None
+    eng.submit(np.arange(1, 10, dtype=np.int32), 2)
+    eng.run()
+    assert eng.stats["prefix_hits"] == 0
+
+
+def test_chunk_must_fit_page(moe_setup):
+    cfg, params = moe_setup
+    with pytest.raises(ValueError, match="max_len"):
+        ServeEngine(params, cfg, ServeConfig(
+            max_len=16, n_slots=2, prefill_chunk=32))
