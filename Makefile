@@ -5,7 +5,8 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test-tier1 test-slow test-all test-kernels test-serve \
-	test-routing bench-micro bench-serve bench-serve-prefix
+	test-routing bench-micro bench-serve bench-serve-prefix \
+	tune-kernels
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
@@ -15,7 +16,14 @@ test-tier1:
 # this target runs just it, pinned to CPU interpret mode).
 test-kernels:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_kernels.py \
-		tests/test_kernel_grads.py tests/test_kernel_backend.py
+		tests/test_kernel_grads.py tests/test_kernel_backend.py \
+		tests/test_kernel_eblock.py
+
+# Measure GMM tilings on this host -> src/repro/kernels/gmm_tunings.json
+# (consulted by gmm.plan_blocks before its static 128 defaults; see
+# docs/kernels.md §Tiling autotune).
+tune-kernels:
+	JAX_PLATFORMS=cpu $(PY) benchmarks/tune_gmm.py
 
 # Continuous-batching serving suite (part of tier-1; this target runs
 # just it: scheduler/slot-pool + admission/budget invariants, the

@@ -6,8 +6,14 @@ import time
 import jax
 
 
-def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (post-warmup, blocking)."""
+def time_call(fn, *args, warmup: int = 2, iters: int = 5,
+              reduce: str = "median") -> float:
+    """Wall time per call in microseconds (post-warmup, blocking).
+
+    ``reduce="median"`` for trend rows; ``"best"`` (min) where the ROADMAP
+    best-of-N discipline applies — this host has ~10ms fixed per-jitted-
+    call cost and ±10–20% wall noise, so comparisons (e.g. the tiling
+    tuner) should rank by best-of-N, not single-shot means."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -16,7 +22,8 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    pick = times[0] if reduce == "best" else times[len(times) // 2]
+    return pick * 1e6
 
 
 ROWS: list[dict] = []           # every emit() lands here for JSON export

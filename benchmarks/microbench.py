@@ -119,6 +119,46 @@ def run():
              f"[{T},{D}]<->[{E},{cap},{D}] fused" if name == "pallas"
              else f"[{T},{D}]<->[{E},{cap},{D}] scatter+gather")
 
+    # --- E-blocked fused dispatch/combine -------------------------------
+    # (The resident-buffer pallas row is above; these force the E-blocked
+    # kernels on the same shape to price the slab walk — what a config
+    # over the VMEM budget pays instead of falling back to ref.  Best-of-N
+    # per ROADMAP housekeeping.)
+    bkP = bk_lib.get("pallas")
+    for eblk in (8, 2):
+        aB = MoEArgs(n_experts=E, k=K, d_model=D, d_ff=FF,
+                     dtype=jnp.float32, kernel_backend="pallas",
+                     dispatch_e_block=eblk)
+        dcB = jax.jit(lambda x, _a=aB: bkP.combine(
+            bkP.dispatch(x, p, _a), p, _a))
+        us = time_call(dcB, x, reduce="best")
+        emit(f"kernel_eblock_dispatch_combine_e{eblk}", us,
+             f"[{T},{D}]<->[{E},{cap},{D}] e_block={eblk} "
+             f"({E // eblk} slabs)")
+
+    # --- GMM tiling autotune --------------------------------------------
+    # (Static 128 tiles vs the measured table — `make tune-kernels` — on
+    # the expert-FFN projection shapes.  plan_blocks resolves the tuned
+    # entry when tiles are left unset; the rows pin the win the
+    # kernel_backend_gmm_pallas row inherits.  Best-of-N.)
+    from repro.kernels import gmm as gmm_lib
+    from repro.kernels import ops as kops
+    w1 = params["w1"].astype(jnp.float32)
+    hid = jnp.maximum(jnp.einsum("ecd,edf->ecf", buf, w1), 0.0)
+    for (xg, wg, label, kdim, ndim) in (
+            (buf, w1, "up", D, FF),
+            (hid, params["w2"].astype(jnp.float32), "down", FF, D)):
+        key = gmm_lib.tuning_key(E, cap, kdim, ndim, jnp.float32)
+        tuned = gmm_lib.lookup_tiling(E, cap, kdim, ndim, jnp.float32)
+        f_def = jax.jit(lambda x_, w_: kops.gmm(x_, w_, bm=128, bn=128,
+                                                bk=128))
+        us = time_call(f_def, xg, wg, warmup=1, iters=3, reduce="best")
+        emit(f"gmm_default_{label}proj", us, f"{key} tiles=(128,128,128)")
+        f_tuned = jax.jit(lambda x_, w_: kops.gmm(x_, w_))
+        us = time_call(f_tuned, xg, wg, warmup=1, iters=3, reduce="best")
+        emit(f"gmm_tuned_{label}proj", us,
+             f"{key} tiles={tuned or '(untuned: 128 defaults)'}")
+
 
 if __name__ == "__main__":
     run()

@@ -1,0 +1,125 @@
+"""GMM tiling autotuner: measure -> src/repro/kernels/gmm_tunings.json.
+
+`plan_blocks` consults the emitted table (exact (E, C, K, N, dtype) keys)
+before its static 128 defaults whenever a caller leaves bm/bn/bk unset —
+see docs/kernels.md §Tiling autotune.  Run via `make tune-kernels`.
+
+Why it wins on this host: the Pallas GMM runs in interpret mode, where
+per-grid-step overhead dominates (the ~68x `kernel_backend_gmm_pallas`
+gap in BENCH_micro.json) — fewer/bigger blocks cut the step count by the
+same factor.  On a real TPU the trade-off is VMEM working set vs. grid
+overhead instead, which is exactly why the table is *measured on the
+host that will run* rather than derived: re-run the sweep per host class.
+
+The swept shapes are the repo's own hot shapes: the microbench expert-FFN
+up/down projections (plus their dw grad shapes — dx shapes coincide with
+the opposite projection's forward key) and the big-buffer acceptance
+config exercised by tests/test_kernel_eblock.py.  The candidate list
+always contains the static default, so a tuned entry is never slower than
+the default on the shape it was measured on (best-of-N, ROADMAP
+housekeeping).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.kernels import gmm as gmm_lib
+from repro.kernels import ops
+
+# (E, C, K, N) per-shard GMM shapes to measure (f32).
+SHAPES = [
+    # microbench expert FFN (benchmarks/microbench.py: E=32, cap=1024,
+    # D=64, FF=128): up / down projections + their dw grad shapes.
+    (32, 1024, 64, 128),
+    (32, 1024, 128, 64),
+    (32, 64, 1024, 128),
+    (32, 128, 1024, 64),
+    # big-buffer acceptance config (tests/test_kernel_eblock.py: E=64,
+    # cap=144, d=512, d_ff=8): fwd + dw shapes for both projections.
+    (64, 144, 512, 8),
+    (64, 144, 8, 512),
+    (64, 512, 144, 8),
+    (64, 8, 144, 512),
+]
+
+# Tile candidates; plan_blocks clamps each to the padded dims, so many
+# collapse to the same resolved plan (deduped below).  (128, 128, 128)
+# first — the static default is always in the race.
+CANDIDATES = [
+    (128, 128, 128),
+    (256, 128, 128),
+    (512, 128, 128),
+    (1024, 128, 128),
+    (256, 256, 256),
+    (512, 512, 512),
+    (1024, 512, 512),
+]
+
+
+def tune_shape(e: int, c: int, k: int, n: int, dtype=jnp.float32,
+               *, warmup: int = 1, iters: int = 3):
+    """Best (bm, bn, bk) for one shape: returns (tiles, best_us, table)."""
+    rng = np.random.default_rng(hash((e, c, k, n)) % (2**32))
+    x = jnp.asarray(rng.normal(size=(e, c, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(e, k, n)), dtype)
+    seen: dict[tuple[int, int, int], float] = {}
+    for cand in CANDIDATES:
+        bp = gmm_lib.plan_blocks(e, c, k, n, dtype, bm=cand[0], bn=cand[1],
+                                 bk=cand[2])
+        tiles = (bp.bm, bp.bn, bp.bk)
+        if tiles in seen:
+            continue
+        us = time_call(
+            lambda x_, w_, t=tiles: ops.gmm(x_, w_, bm=t[0], bn=t[1],
+                                            bk=t[2]),
+            x, w, warmup=warmup, iters=iters, reduce="best")
+        seen[tiles] = us
+        print(f"  {e}x{c}x{k}x{n}: tiles={tiles} grid={bp.grid} "
+              f"{us / 1e3:.1f} ms")
+    best = min(seen, key=seen.get)
+    return best, seen[best], seen
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="table path (default: the path plan_blocks reads "
+                         "— src/repro/kernels/gmm_tunings.json or "
+                         "$REPRO_GMM_TUNINGS)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+
+    out_path = args.out or gmm_lib.tunings_path()
+    table: dict = {
+        "_meta": {
+            "tuner": "benchmarks/tune_gmm.py",
+            "backend": jax.default_backend(),
+            "interpret": jax.default_backend() != "tpu",
+            "date": time.strftime("%Y-%m-%d"),
+            "reduce": f"best-of-{args.iters}",
+        },
+    }
+    for (e, c, k, n) in SHAPES:
+        print(f"tuning {e}x{c}x{k}x{n} ...")
+        best, best_us, timings = tune_shape(e, c, k, n, iters=args.iters)
+        default = next(iter(timings))            # (128,…) resolved first
+        key = gmm_lib.tuning_key(e, c, k, n, jnp.float32)
+        table[key] = list(best)
+        print(f"  -> {key}: {list(best)} ({best_us / 1e3:.1f} ms vs "
+              f"default {timings[default] / 1e3:.1f} ms)")
+    with open(out_path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+        f.write("\n")
+    gmm_lib.invalidate_tunings()
+    print(f"wrote {out_path} ({len(table) - 1} shapes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -88,10 +88,17 @@ class ModelConfig:
     # Kernel backend for the MoE hot path ("ref" | "pallas"); None derives
     # from expert_impl.  See src/repro/kernels/backend.py and docs/kernels.md.
     kernel_backend: str | None = None
-    # VMEM budget (bytes) for the fused dispatch/combine kernel; None =
+    # VMEM budget (bytes) for the fused dispatch/combine kernels; None =
     # kernels.dispatch.DEFAULT_VMEM_LIMIT.  Past it the pallas backend
-    # falls back to the ref scatter instead of silently OOMing.
+    # E-blocks the buffer ([e_block, C, d] slabs) instead of bailing to
+    # the ref scatter; see docs/kernels.md §E-blocked dispatch.
     dispatch_vmem_limit: int | None = None
+    # Force a fused dispatch/combine slab size; None auto-selects against
+    # the VMEM budget.
+    dispatch_e_block: int | None = None
+    # Consult the measured GMM tiling table (make tune-kernels); False
+    # pins the static 128-tile defaults.
+    gmm_autotune: bool = True
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -64,6 +64,11 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
     dec = router.route(params, x_local, train=train, rng=rng)
     info, p = dec, dec.plan
     capacity = p.capacity
+    # Local tokens scatter into a *global*-E buffer before the exchange —
+    # the shape where the pallas backend's VMEM planning matters most: past
+    # the budget it runs the E-blocked kernels ([e_block, C, d] slabs,
+    # a.dispatch_e_block / a.dispatch_vmem_limit) rather than bailing to
+    # the ref scatter.
     buf = bk.dispatch(x_local, p, a)                   # [E, C, d] local
 
     # all_to_all #1: expert-major exchange.  [E, C, d] -> [E/ep, ep*C, d]

@@ -69,6 +69,8 @@ class HMoEArgs:
     # resolves to "ref" (explicit resolution — unknown/broken raises).
     kernel_backend: str | None = None
     dispatch_vmem_limit: int | None = None
+    dispatch_e_block: int | None = None    # fused-kernel slab size; None=auto
+    gmm_autotune: bool = True              # measured GMM tilings (kernels.md)
     dtype: Any = jnp.bfloat16
 
     @property

@@ -78,11 +78,21 @@ class MoEArgs:
     # Resolution is explicit — an unknown or broken backend raises
     # KernelBackendError instead of silently degrading to the slow path.
     kernel_backend: str | None = None
-    # VMEM budget (bytes) for the fused dispatch/combine kernel's resident
-    # [E, C, d] buffer; None uses kernels.dispatch.DEFAULT_VMEM_LIMIT.
-    # Past the limit the pallas backend falls back to the ref scatter
-    # instead of silently OOMing (the E-blocked variant is future work).
+    # VMEM budget (bytes) for the fused dispatch/combine kernels; None
+    # uses kernels.dispatch.DEFAULT_VMEM_LIMIT.  Past the limit the pallas
+    # backend E-blocks the buffer (only an [e_block, C, d] slab resident
+    # per grid step); only a shape whose one-expert slab still exceeds the
+    # budget falls back to the ref scatter.
     dispatch_vmem_limit: int | None = None
+    # Expert-block size for the fused dispatch/combine kernels: None
+    # auto-selects against the VMEM budget (whole buffer resident when it
+    # fits, else the largest fitting power-of-two slab); an explicit int
+    # forces that slab size for both forward and backward.
+    dispatch_e_block: int | None = None
+    # Consult the measured GMM tiling table (docs/kernels.md §Tiling
+    # autotune, seeded by `make tune-kernels`) when planning expert-FFN
+    # blocks; False pins the static 128-tile defaults.
+    gmm_autotune: bool = True
     sigmoid_output: bool = False        # paper's LM passes MoE out thru sigmoid
     wide_dispatch: bool = True          # §3.1 combined-batch token resharding
     dtype: Any = jnp.bfloat16

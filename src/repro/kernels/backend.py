@@ -249,61 +249,78 @@ def _register_pallas() -> None:
         log.warning("pallas kernel backend unavailable: %r", err)
         return
 
-    def _vmem_ok(a, n_experts, capacity, d, dtype, n_tokens, what) -> bool:
-        """VMEM-footprint guard: the fused kernels keep the whole [E, C, d]
-        buffer resident; past the (configurable) budget fall back to the
-        ref scatter instead of silently OOMing.  The E-blocked variant
-        stays future work (ROADMAP)."""
+    def _plan_e_block(a, n_experts, capacity, d, dtype, n_tokens, what):
+        """Fused-kernel buffer-regime planning: ``(use_pallas, e_block)``.
+
+        ``e_block=None`` keeps the whole [E, C, d] buffer VMEM-resident;
+        an int runs the E-blocked kernels with that slab size.  The
+        selection comes from ``dispatch_lib.select_e_block`` against the
+        (configurable) budget, so past ~16 MiB the backend now *blocks*
+        the expert dimension instead of bailing — only a shape whose
+        single-expert slab still exceeds the budget falls back to the ref
+        scatter (with a warning).  ``MoEArgs.dispatch_e_block`` forces a
+        slab size explicitly."""
+        forced = getattr(a, "dispatch_e_block", None)
+        if forced is not None:
+            return True, forced
         limit = getattr(a, "dispatch_vmem_limit", None)
-        limit = dispatch_lib.DEFAULT_VMEM_LIMIT if limit is None else limit
-        need = dispatch_lib.vmem_bytes(n_experts, capacity, d, dtype,
-                                       n_tokens)
-        if need <= limit:
-            return True
-        log.warning(
-            "pallas %s buffer [E=%d, C=%d, d=%d] needs ~%d B VMEM > "
-            "limit %d B; falling back to the ref path for this call",
-            what, n_experts, capacity, d, need, limit)
-        return False
+        try:
+            return True, dispatch_lib.select_e_block(
+                n_experts, capacity, d, dtype, n_tokens=n_tokens,
+                limit=limit)
+        except dispatch_lib.DispatchVMEMError as err:
+            log.warning(
+                "pallas %s: %s; falling back to the ref path for this "
+                "call", what, err)
+            return False, None
 
     def _pallas_expert_ffn(params, x, a, *, ctx=None):
         if ctx is not None:
             _check_local_buffer(x, a, ctx, "pallas")
-        # Per-shard block spec: the operands here ARE the per-shard view
-        # (a shard_map body hands local blocks — validated above, and the
-        # EP schedule all-gathers the FSDP-sharded d_ff before this call),
-        # so the plan derives from them and flows into both GMMs.
-        from repro.kernels import gmm as gmm_lib
-        e, c, d = x.shape
-        bp = gmm_lib.plan_blocks(e, c, d, params["w1"].shape[-1], x.dtype)
-        return ops.expert_ffn(params, x, activation=a.activation,
-                              bm=bp.bm, bn=bp.bn, bk=bp.bk)
+        # Tile choice: leave bm/bn/bk unset so each GMM plans its own
+        # per-shard operand shapes (the operands here ARE the per-shard
+        # view — a shard_map body hands local blocks, validated above) —
+        # consulting the measured tuning table first, static defaults
+        # otherwise.  `MoEArgs.gmm_autotune=False` pins the defaults.
+        tiles = {}
+        if not getattr(a, "gmm_autotune", True):
+            from repro.kernels import gmm as gmm_lib
+            tiles = dict(bm=gmm_lib.DEFAULT_TILE, bn=gmm_lib.DEFAULT_TILE,
+                         bk=gmm_lib.DEFAULT_TILE)
+        return ops.expert_ffn(params, x, activation=a.activation, **tiles)
 
     def _pallas_dispatch(x, p, a, *, ctx=None):
         p = _as_plan(p)
         # p.n_experts is authoritative: the EP schedule dispatches local
-        # tokens into *global*-E buffers before its all_to_all exchange.
-        if not _vmem_ok(a, p.n_experts, p.capacity, x.shape[-1], x.dtype,
-                        x.shape[0], "dispatch"):
+        # tokens into *global*-E buffers before its all_to_all exchange —
+        # exactly where E-blocking matters most.
+        ok, e_block = _plan_e_block(a, p.n_experts, p.capacity,
+                                    x.shape[-1], x.dtype, x.shape[0],
+                                    "dispatch")
+        if not ok:
             return dsp.dispatch(x, p)
         return ops.dispatch(x, p.expert_index, p.position,
                             n_experts=p.n_experts, capacity=p.capacity,
                             vmem_limit=getattr(a, "dispatch_vmem_limit",
-                                               None))
+                                               None),
+                            e_block=e_block)
 
     def _pallas_combine(buf, p, a, *, dtype=None, ctx=None):
         p = _as_plan(p)
-        # Same estimate as ops.combine's own guard (the [block_t, d]
-        # output block rides along with the resident buffer) so borderline
-        # shapes fall back here instead of raising one layer down.
-        n_tok = min(128, p.expert_index.shape[0])
-        if not _vmem_ok(a, buf.shape[0], buf.shape[1], buf.shape[2],
-                        buf.dtype, n_tok, "combine"):
+        # Same token-block term as ops.combine's own guard — both derive
+        # from COMBINE_BLOCK_T, so a borderline shape cannot pass this
+        # guard and trip (or regime-mismatch) the one a layer down.
+        n_tok = min(dispatch_lib.COMBINE_BLOCK_T, p.expert_index.shape[0])
+        ok, e_block = _plan_e_block(a, buf.shape[0], buf.shape[1],
+                                    buf.shape[2], buf.dtype, n_tok,
+                                    "combine")
+        if not ok:
             return dsp.combine(buf, p, dtype=dtype)
         return ops.combine(buf, p.weight, p.expert_index, p.position,
                            out_dtype=dtype or buf.dtype,
                            vmem_limit=getattr(a, "dispatch_vmem_limit",
-                                              None))
+                                              None),
+                           e_block=e_block)
 
     def _pallas_topk(noisy, k, kk):
         w, idx, vals = ops.topk_gating_full(noisy, k, extra=kk - k)

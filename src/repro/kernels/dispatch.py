@@ -11,11 +11,21 @@ the gather and the ``sum_k w_k * E_k(x)`` reduction (Eq. 2) in one pass,
 accumulating at f32 — the [T, k, d] gathered intermediate of the jnp path
 never materializes.
 
-The destination buffer stays VMEM-resident across the whole grid (constant
-index map — a revolving output block).  VMEM budget: the full [E_local, C,
-d] buffer, e.g. 8 experts x 512 slots x 512 dims at f32 = 8 MiB, under the
-~16 MiB budget for every assigned shape; larger buffers need an E-blocked
-variant (future work, noted in docs/kernels.md).
+Two buffer regimes, selected per call by :func:`select_e_block`:
+
+* **resident** — the destination buffer stays VMEM-resident across the
+  whole grid (constant index map — a revolving output block).  VMEM
+  budget: the full [E_local, C, d] buffer, e.g. 8 experts x 512 slots x
+  512 dims at f32 = 8 MiB, under the ~16 MiB budget.
+* **E-blocked** — past the budget the expert dimension joins the grid and
+  only an [e_block, C, d] slab is live per step (the Pallas pipeline
+  double-buffers slab transfers, so the estimate charges two slabs).
+  Assignments are pre-bucketed per expert block: every kept assignment
+  owns a unique (expert, position) cell, so its bucket slot is just
+  ``e*C + p`` — an O(T·k) scatter, no sort — and the bucketed plan rides
+  scalar-prefetch like the resident plan does.  This is what keeps
+  paper-scale E on the fused path (§3.2's compute-dense experts) instead
+  of bailing to the ref scatter.
 
 Dropped assignments (position >= capacity, including the zero-weight
 padding the plan assigns position==capacity) write nothing / combine at
@@ -28,6 +38,9 @@ Both directions carry ``jax.custom_vjp`` so the Pallas path trains:
 * combine's buffer cotangent is the dispatch scatter of ``w_k * dy[t]``
   (the kernel takes an optional per-assignment scale for exactly this),
   and its weight cotangent is the per-assignment dot <dy[t], buf[e, p]>.
+
+The chosen ``e_block`` threads through both VJPs, so forward and backward
+run the same buffer regime.
 
 On this CPU build host kernels run in interpret mode; ``interpret=False``
 is the TPU path.
@@ -43,13 +56,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.gmm import round_up as _round_up
 
-# VMEM budget for the revolving [E, C, d] output (dispatch) / input
-# (combine) buffer that stays resident across the whole grid, plus the
-# token block.  Shapes past the limit need the E-blocked variant (future
-# work, docs/kernels.md); until then the guard fails loudly — or, via the
-# backend registry, falls back to the ref scatter — instead of silently
-# OOMing the core.
+# VMEM budget for the buffer that stays resident across the whole grid
+# (resident regime: the full [E, C, d] output/input; E-blocked regime: a
+# double-buffered [e_block, C, d] slab pair), plus the token block.  The
+# guard *selects a regime* (select_e_block) instead of failing; only a
+# shape whose single-expert slab still exceeds the limit raises — or, via
+# the backend registry, falls back to the ref scatter.
 DEFAULT_VMEM_LIMIT = 16 * 1024 * 1024
+
+# Token-block default for the fused combine.  The backend registry's
+# pre-call VMEM estimate and ops.combine's own guard both derive their
+# token-block term from THIS constant — one source of truth, so a
+# borderline shape cannot pass one guard and trip the other.
+COMBINE_BLOCK_T = 128
 
 
 class DispatchVMEMError(RuntimeError):
@@ -58,27 +77,68 @@ class DispatchVMEMError(RuntimeError):
 
 def vmem_bytes(n_experts: int, capacity: int, d: int, dtype,
                n_tokens: int = 0) -> int:
-    """Estimated resident VMEM for one fused dispatch/combine call: the
+    """Estimated resident VMEM for one *resident-regime* call: the
     [E, C, d] buffer (constant index map — never rotated out) plus the
     [T, d] token block."""
     item = jnp.dtype(dtype).itemsize
     return int((n_experts * capacity * d + n_tokens * d) * item)
 
 
+def eblock_vmem_bytes(e_block: int, capacity: int, d: int, dtype,
+                      n_tokens: int = 0) -> int:
+    """Estimated resident VMEM for one *E-blocked* call: two in-flight
+    [e_block, C, d] slabs (the Pallas pipeline double-buffers block
+    transfers) plus the [T, d] token block."""
+    item = jnp.dtype(dtype).itemsize
+    return int((2 * e_block * capacity * d + n_tokens * d) * item)
+
+
 def check_vmem(n_experts: int, capacity: int, d: int, dtype, *,
                n_tokens: int = 0, limit: int | None = None) -> int:
-    """Raise DispatchVMEMError when the estimate exceeds ``limit``
-    (None -> DEFAULT_VMEM_LIMIT).  Returns the estimate."""
+    """Raise DispatchVMEMError when the resident-regime estimate exceeds
+    ``limit`` (None -> DEFAULT_VMEM_LIMIT).  Returns the estimate.
+
+    Callers that can run E-blocked should prefer :func:`select_e_block`,
+    which picks a slab size instead of raising."""
     limit = DEFAULT_VMEM_LIMIT if limit is None else limit
     need = vmem_bytes(n_experts, capacity, d, dtype, n_tokens)
     if need > limit:
         raise DispatchVMEMError(
             f"fused dispatch/combine buffer [E={n_experts}, C={capacity}, "
             f"d={d}] ({jnp.dtype(dtype).name}) needs ~{need} B VMEM "
-            f"> limit {limit} B; shrink capacity/shard the experts, raise "
-            f"the limit, or use the ref backend (E-blocked kernel is "
-            f"future work)")
+            f"> limit {limit} B; use the E-blocked kernel (e_block / "
+            f"select_e_block), shrink capacity, raise the limit, or use "
+            f"the ref backend")
     return need
+
+
+def select_e_block(n_experts: int, capacity: int, d: int, dtype, *,
+                   n_tokens: int = 0, limit: int | None = None
+                   ) -> int | None:
+    """Pick the fused kernels' buffer regime for a shape.
+
+    Returns ``None`` when the whole [E, C, d] buffer fits ``limit``
+    (resident-buffer kernels), else the largest power-of-two expert-block
+    size whose double-buffered [e_block, C, d] slab pair (plus the [T, d]
+    token block) fits.  Raises :class:`DispatchVMEMError` only when even
+    a one-expert slab exceeds the limit.
+    """
+    limit = DEFAULT_VMEM_LIMIT if limit is None else limit
+    if vmem_bytes(n_experts, capacity, d, dtype, n_tokens) <= limit:
+        return None
+    blk = 1
+    while (blk * 2 < n_experts
+           and eblock_vmem_bytes(blk * 2, capacity, d, dtype,
+                                 n_tokens) <= limit):
+        blk *= 2
+    if eblock_vmem_bytes(blk, capacity, d, dtype, n_tokens) > limit:
+        raise DispatchVMEMError(
+            f"fused dispatch/combine slab [e_block=1, C={capacity}, "
+            f"d={d}] ({jnp.dtype(dtype).name}) needs "
+            f"~{eblock_vmem_bytes(1, capacity, d, dtype, n_tokens)} B VMEM "
+            f"> limit {limit} B even E-blocked; shrink capacity/d, raise "
+            f"the limit, or use the ref backend")
+    return blk
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +152,7 @@ def _dispatch_kernel(eidx_ref, pos_ref, scale_ref, x_ref, o_ref, *,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     base = pl.program_id(0) * block_a
+    t = x_ref.shape[0]
 
     def body(i, carry):
         a = base + i
@@ -99,7 +160,10 @@ def _dispatch_kernel(eidx_ref, pos_ref, scale_ref, x_ref, o_ref, *,
         p = pos_ref[a]
         kept = p < capacity                     # padding carries p==capacity
         pc = jnp.where(kept, p, 0)
-        row = x_ref[a // k] * scale_ref[a]
+        # Padded assignments (a >= T*k) would index x past T-1; clamp so the
+        # load is in-bounds on the non-interpret TPU path (the value is
+        # discarded by `kept` either way).
+        row = x_ref[jnp.minimum(a // k, t - 1)] * scale_ref[a]
         cur = o_ref[e, pc]
         o_ref[e, pc] = jnp.where(kept, row.astype(o_ref.dtype), cur)
         return carry
@@ -132,6 +196,85 @@ def _dispatch_raw(x, eidx, pos, scale, n_experts, capacity, block_a,
         out_shape=jax.ShapeDtypeStruct((n_experts, capacity, d), x.dtype),
         interpret=interpret,
     )(ef, pf, sf, x)
+
+
+# ---------------------------------------------------------------------------
+# E-blocked dispatch: the grid gains an expert-block dimension; only an
+# [e_block, C, d] slab is live per step
+# ---------------------------------------------------------------------------
+
+def _bucket_assignments(eidx, pos, scale, n_experts, capacity, e_block):
+    """Invert the [T, k] plan into per-expert-block slot tables.
+
+    Every *kept* assignment owns a unique (expert, position) buffer cell,
+    so its bucket slot is simply ``e*C + p`` — no sort.  Returns flat
+    [E_pad * C] arrays: ``btok[e*C + p]`` is the token row feeding expert
+    e's slot p (-1 when the slot is empty) and ``bscale`` the
+    per-assignment scale.  Dropped assignments (p >= capacity) scatter
+    out-of-bounds and are discarded by ``mode="drop"``.
+    """
+    t, k = eidx.shape
+    e_pad = _round_up(n_experts, e_block)
+    ef = eidx.reshape(-1)
+    pf = pos.reshape(-1)
+    kept = pf < capacity
+    slot = jnp.where(kept, ef * capacity + pf, e_pad * capacity)
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+    btok = jnp.full((e_pad * capacity,), -1, jnp.int32).at[slot].set(
+        tok, mode="drop")
+    bscale = jnp.zeros((e_pad * capacity,), jnp.float32).at[slot].set(
+        scale.astype(jnp.float32).reshape(-1), mode="drop")
+    return btok, bscale
+
+
+def _dispatch_eblock_kernel(btok_ref, bscale_ref, x_ref, o_ref, *,
+                            capacity: int, e_block: int):
+    base = pl.program_id(0) * (e_block * capacity)
+    t = x_ref.shape[0]
+
+    def body(s, carry):
+        tok = btok_ref[base + s]
+        filled = tok >= 0
+        row = x_ref[jnp.where(filled, tok, 0)] * bscale_ref[base + s]
+        # Each output cell is visited exactly once (slots are unique), so
+        # empty cells are zeroed here instead of a separate pass.
+        o_ref[s // capacity, s % capacity] = jnp.where(
+            filled, row, 0.0).astype(o_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, e_block * capacity, body, 0)
+
+
+def _dispatch_eblock_raw(x, eidx, pos, scale, n_experts, capacity, e_block,
+                         interpret):
+    t, d = x.shape
+    e_pad = _round_up(n_experts, e_block)
+    btok, bscale = _bucket_assignments(eidx, pos, scale, n_experts,
+                                       capacity, e_block)
+    kernel = functools.partial(_dispatch_eblock_kernel, capacity=capacity,
+                               e_block=e_block)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(e_pad // e_block,),
+            in_specs=[pl.BlockSpec((t, d), lambda b, *_: (0, 0))],
+            out_specs=pl.BlockSpec((e_block, capacity, d),
+                                   lambda b, *_: (b, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((e_pad, capacity, d), x.dtype),
+        interpret=interpret,
+    )(btok, bscale, x)
+    return out[:n_experts] if e_pad != n_experts else out
+
+
+def _dispatch_raw_any(x, eidx, pos, scale, n_experts, capacity, block_a,
+                      e_block, interpret):
+    if e_block is None:
+        return _dispatch_raw(x, eidx, pos, scale, n_experts, capacity,
+                             block_a, interpret)
+    return _dispatch_eblock_raw(x, eidx, pos, scale, n_experts, capacity,
+                                e_block, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -188,50 +331,147 @@ def _combine_raw(buf, w, eidx, pos, out_dtype, block_t, interpret):
 
 
 # ---------------------------------------------------------------------------
+# E-blocked combine: grid (T-blocks, E-blocks) with the expert dimension
+# innermost; partial sums accumulate in an f32 scratch across slabs
+# ---------------------------------------------------------------------------
+
+def _combine_eblock_kernel(eidx_ref, pos_ref, w_ref, buf_ref, o_ref,
+                           acc_ref, *, k: int, capacity: int, block_t: int,
+                           e_block: int, n_eblk: int):
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base_t = pl.program_id(0) * block_t
+    base_e = eb * e_block
+    d = o_ref.shape[-1]
+
+    def body(i, carry):
+        t = base_t + i
+        acc = jnp.zeros((d,), jnp.float32)
+        for j in range(k):                      # k <= 8: static unroll
+            a = t * k + j
+            e = eidx_ref[a]
+            p = pos_ref[a]
+            hit = (e >= base_e) & (e < base_e + e_block) & (p < capacity)
+            el = jnp.where(hit, e - base_e, 0)
+            pc = jnp.where(hit, p, 0)
+            w = jnp.where(hit, w_ref[a], 0.0)
+            acc = acc + w * buf_ref[el, pc].astype(jnp.float32)
+        acc_ref[i] = acc_ref[i] + acc
+        return carry
+
+    jax.lax.fori_loop(0, block_t, body, 0)
+
+    @pl.when(eb == n_eblk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _combine_eblock_raw(buf, w, eidx, pos, out_dtype, block_t, e_block,
+                        interpret):
+    n_experts, capacity, d = buf.shape
+    t, k = eidx.shape
+    n = t * k
+    block_t = min(block_t, t)
+    tpad = _round_up(t, block_t)
+    npad = tpad * k
+    e_pad = _round_up(n_experts, e_block)
+    n_eblk = e_pad // e_block
+    if e_pad != n_experts:
+        # Padded experts are never referenced (e < n_experts in the plan),
+        # but the slab walk needs a whole number of blocks.
+        buf = jnp.pad(buf, ((0, e_pad - n_experts), (0, 0), (0, 0)))
+    ef = jnp.zeros((npad,), jnp.int32).at[:n].set(eidx.reshape(-1))
+    pf = jnp.full((npad,), capacity, jnp.int32).at[:n].set(pos.reshape(-1))
+    wf = jnp.zeros((npad,), jnp.float32).at[:n].set(
+        w.astype(jnp.float32).reshape(-1))
+    kernel = functools.partial(_combine_eblock_kernel, k=k,
+                               capacity=capacity, block_t=block_t,
+                               e_block=e_block, n_eblk=n_eblk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            # Row-major grid walk: for each token block the expert slabs
+            # iterate consecutively over the revolving output block.
+            grid=(tpad // block_t, n_eblk),
+            in_specs=[pl.BlockSpec((e_block, capacity, d),
+                                   lambda i, j, *_: (j, 0, 0))],
+            out_specs=pl.BlockSpec((block_t, d), lambda i, j, *_: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((tpad, d), out_dtype),
+        interpret=interpret,
+    )(ef, pf, wf, buf)
+    return out[:t] if tpad != t else out
+
+
+def _combine_raw_any(buf, w, eidx, pos, out_dtype, block_t, e_block,
+                     interpret):
+    if e_block is None:
+        return _combine_raw(buf, w, eidx, pos, out_dtype, block_t,
+                            interpret)
+    return _combine_eblock_raw(buf, w, eidx, pos, out_dtype, block_t,
+                               e_block, interpret)
+
+
+# ---------------------------------------------------------------------------
 # differentiable public ops
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret,
+              e_block):
     ones = jnp.ones((x.shape[0], eidx.shape[1]), jnp.float32)
-    return _dispatch_raw(x, eidx, pos, ones, n_experts, capacity, block_a,
-                         interpret)
+    return _dispatch_raw_any(x, eidx, pos, ones, n_experts, capacity,
+                             block_a, e_block, interpret)
 
 
-def _dispatch_fwd(x, eidx, pos, n_experts, capacity, block_a, interpret):
-    return (_dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret),
+def _dispatch_fwd(x, eidx, pos, n_experts, capacity, block_a, interpret,
+                  e_block):
+    return (_dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret,
+                      e_block),
             (eidx, pos))
 
 
-def _dispatch_bwd(n_experts, capacity, block_a, interpret, res, g):
+def _dispatch_bwd(n_experts, capacity, block_a, interpret, e_block, res, g):
     eidx, pos = res
     # The scatter duplicates x[t] into its kept slots, so dx is the
-    # unit-weight combine of the cotangent buffer (same fused kernel).
+    # unit-weight combine of the cotangent buffer (same fused kernel,
+    # same buffer regime).
     unit = jnp.ones(eidx.shape, jnp.float32)
-    dx = _combine_raw(g, unit, eidx, pos, g.dtype, 128, interpret)
+    dx = _combine_raw_any(g, unit, eidx, pos, g.dtype, COMBINE_BLOCK_T,
+                          e_block, interpret)
     return dx, None, None
 
 
 _dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _combine(buf, w, eidx, pos, out_dtype, block_t, interpret):
-    return _combine_raw(buf, w, eidx, pos, out_dtype, block_t, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _combine(buf, w, eidx, pos, out_dtype, block_t, interpret, e_block):
+    return _combine_raw_any(buf, w, eidx, pos, out_dtype, block_t, e_block,
+                            interpret)
 
 
-def _combine_fwd(buf, w, eidx, pos, out_dtype, block_t, interpret):
-    return (_combine_raw(buf, w, eidx, pos, out_dtype, block_t, interpret),
+def _combine_fwd(buf, w, eidx, pos, out_dtype, block_t, interpret, e_block):
+    return (_combine_raw_any(buf, w, eidx, pos, out_dtype, block_t, e_block,
+                             interpret),
             (buf, w, eidx, pos))
 
 
-def _combine_bwd(out_dtype, block_t, interpret, res, g):
+def _combine_bwd(out_dtype, block_t, interpret, e_block, res, g):
     buf, w, eidx, pos = res
     n_experts, capacity, _ = buf.shape
     gf = g.astype(jnp.float32)
-    # d_buf[e_k, p_k] += w_k * dy[t]: the scaled dispatch scatter.
-    dbuf = _dispatch_raw(gf, eidx, pos, w.astype(jnp.float32), n_experts,
-                         capacity, 256, interpret).astype(buf.dtype)
+    # d_buf[e_k, p_k] += w_k * dy[t]: the scaled dispatch scatter (same
+    # buffer regime as forward).
+    dbuf = _dispatch_raw_any(gf, eidx, pos, w.astype(jnp.float32),
+                             n_experts, capacity, 256, e_block,
+                             interpret).astype(buf.dtype)
     # d_w[t, k] = <dy[t], buf[e_k, p_k]> for kept slots (XLA gather: the
     # [T, k, d] intermediate only exists in backward).
     kept = pos < capacity
@@ -247,41 +487,59 @@ _combine.defvjp(_combine_fwd, _combine_bwd)
 def dispatch(x: jax.Array, eidx: jax.Array, pos: jax.Array, *,
              n_experts: int, capacity: int, block_a: int = 256,
              interpret: bool = True,
-             vmem_limit: int | None = None) -> jax.Array:
+             vmem_limit: int | None = None,
+             e_block: int | None = None) -> jax.Array:
     """[T, d] -> [E, C, d]: fused capacity-buffer build.
 
     ``eidx``/``pos`` are the [T, k] DispatchPlan arrays; assignments with
     ``pos >= capacity`` are dropped, matching ``core.dispatch.dispatch``.
-    Raises :class:`DispatchVMEMError` when the resident buffer estimate
-    exceeds ``vmem_limit`` (None -> DEFAULT_VMEM_LIMIT).
+    ``e_block=None`` auto-selects the buffer regime from ``vmem_limit``
+    (None -> DEFAULT_VMEM_LIMIT): whole-buffer resident when it fits,
+    else the largest fitting E-block slab; an explicit int forces that
+    slab size.  Raises :class:`DispatchVMEMError` when even a one-expert
+    slab exceeds the limit.
     """
-    check_vmem(n_experts, capacity, x.shape[-1], x.dtype,
-               n_tokens=x.shape[0], limit=vmem_limit)
+    if e_block is None:
+        e_block = select_e_block(n_experts, capacity, x.shape[-1], x.dtype,
+                                 n_tokens=x.shape[0], limit=vmem_limit)
+    elif e_block < 1:
+        raise ValueError(f"e_block must be >= 1, got {e_block}")
     return _dispatch_jit(x, eidx, pos, n_experts, capacity, block_a,
-                         interpret)
+                         interpret, e_block)
 
 
 @functools.partial(jax.jit, static_argnames=("n_experts", "capacity",
-                                             "block_a", "interpret"))
-def _dispatch_jit(x, eidx, pos, n_experts, capacity, block_a, interpret):
-    return _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret)
+                                             "block_a", "interpret",
+                                             "e_block"))
+def _dispatch_jit(x, eidx, pos, n_experts, capacity, block_a, interpret,
+                  e_block):
+    return _dispatch(x, eidx, pos, n_experts, capacity, block_a, interpret,
+                     e_block)
 
 
 def combine(buf: jax.Array, w: jax.Array, eidx: jax.Array, pos: jax.Array,
-            *, out_dtype=None, block_t: int = 128,
+            *, out_dtype=None, block_t: int = COMBINE_BLOCK_T,
             interpret: bool = True,
-            vmem_limit: int | None = None) -> jax.Array:
+            vmem_limit: int | None = None,
+            e_block: int | None = None) -> jax.Array:
     """[E, C, d] -> [T, d]: fused weighted gather, y = sum_k w_k E_{e_k}(x).
 
-    Raises :class:`DispatchVMEMError` when the resident buffer estimate
-    exceeds ``vmem_limit`` (None -> DEFAULT_VMEM_LIMIT)."""
+    ``e_block`` selects the buffer regime exactly as in :func:`dispatch`;
+    raises :class:`DispatchVMEMError` when even a one-expert slab exceeds
+    ``vmem_limit`` (None -> DEFAULT_VMEM_LIMIT)."""
     out_dtype = out_dtype or buf.dtype
-    check_vmem(buf.shape[0], buf.shape[1], buf.shape[2], buf.dtype,
-               n_tokens=min(block_t, eidx.shape[0]), limit=vmem_limit)
-    return _combine_jit(buf, w, eidx, pos, out_dtype, block_t, interpret)
+    if e_block is None:
+        e_block = select_e_block(
+            buf.shape[0], buf.shape[1], buf.shape[2], buf.dtype,
+            n_tokens=min(block_t, eidx.shape[0]), limit=vmem_limit)
+    elif e_block < 1:
+        raise ValueError(f"e_block must be >= 1, got {e_block}")
+    return _combine_jit(buf, w, eidx, pos, out_dtype, block_t, interpret,
+                        e_block)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "block_t",
-                                             "interpret"))
-def _combine_jit(buf, w, eidx, pos, out_dtype, block_t, interpret):
-    return _combine(buf, w, eidx, pos, out_dtype, block_t, interpret)
+                                             "interpret", "e_block"))
+def _combine_jit(buf, w, eidx, pos, out_dtype, block_t, interpret, e_block):
+    return _combine(buf, w, eidx, pos, out_dtype, block_t, interpret,
+                    e_block)

@@ -33,12 +33,22 @@ rematerialized with one extra no-activation GMM (the Appendix-D
 "recompute expert activations on the backward pass" policy) rather than
 saved, keeping forward residuals at (x, w).
 
+Tile sizes come from a **measured tuning table** when the caller leaves
+them unset: ``plan_blocks`` consults ``gmm_tunings.json`` (seeded by
+``make tune-kernels``, exact (E, C, K, N, dtype) keys) before its static
+128 defaults — on this interpret-mode host per-grid-step overhead
+dominates, so fewer/bigger blocks win by integer factors (the
+``kernel_backend_gmm_pallas`` gap in BENCH_micro.json).  Explicit
+``bm/bn/bk`` arguments always override the table.
+
 On this CPU build host kernels run in interpret mode (the kernel body
 executes as Python/jnp); ``interpret=False`` is the TPU path.
 """
 from __future__ import annotations
 
 import functools
+import json
+import os
 from typing import NamedTuple
 
 import jax
@@ -55,6 +65,69 @@ def round_up(x: int, m: int) -> int:
 def _sublane(dtype) -> int:
     """Minimum TPU sublane tile for a dtype (second-to-last dim)."""
     return 16 if dtype == jnp.bfloat16 else 8
+
+
+# --- measured tiling table (docs/kernels.md §Tiling autotune) --------------
+
+# Static fallback tile edge when a shape has no measured entry.
+DEFAULT_TILE = 128
+
+# Env var overriding the committed table path (tests point it at tmp
+# files; an empty value falls through to the default).
+TUNINGS_ENV = "REPRO_GMM_TUNINGS"
+_DEFAULT_TUNINGS_PATH = os.path.join(os.path.dirname(__file__),
+                                     "gmm_tunings.json")
+
+_tunings_cache: tuple[str, dict] | None = None
+
+
+def tunings_path() -> str:
+    return os.environ.get(TUNINGS_ENV) or _DEFAULT_TUNINGS_PATH
+
+
+def tuning_key(e: int, c: int, k: int, n: int, dtype) -> str:
+    """Exact-shape table key: ``{E}x{C}x{K}x{N}x{dtype}``."""
+    return f"{e}x{c}x{k}x{n}x{jnp.dtype(dtype).name}"
+
+
+def load_tunings(path: str | None = None) -> dict:
+    """Load the measured shape -> (bm, bn, bk) table (missing file -> {}).
+
+    Keys beginning with ``_`` are metadata (tuner provenance) and are
+    skipped.  Cached per path; call :func:`invalidate_tunings` after
+    re-tuning or pointing ``REPRO_GMM_TUNINGS`` elsewhere mid-process.
+    """
+    global _tunings_cache
+    path = path or tunings_path()
+    if _tunings_cache is not None and _tunings_cache[0] == path:
+        return _tunings_cache[1]
+    table: dict = {}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        table = {key: tuple(int(v) for v in val)
+                 for key, val in raw.items() if not key.startswith("_")}
+    except FileNotFoundError:
+        pass
+    _tunings_cache = (path, table)
+    return table
+
+
+def invalidate_tunings() -> None:
+    """Drop the cached table (next lookup re-reads the file).
+
+    Note: jitted callers that already traced with ``bm=bn=bk=None``
+    resolved the table at trace time; the jit cache must also be cleared
+    (or explicit tiles passed) for a changed table to take effect.
+    """
+    global _tunings_cache
+    _tunings_cache = None
+
+
+def lookup_tiling(e: int, c: int, k: int, n: int,
+                  dtype) -> tuple[int, int, int] | None:
+    """Measured (bm, bn, bk) for an exact shape, or None (use defaults)."""
+    return load_tunings().get(tuning_key(e, c, k, n, dtype))
 
 
 class BlockPlan(NamedTuple):
@@ -76,13 +149,24 @@ class BlockPlan(NamedTuple):
 
 
 def plan_blocks(e: int, c: int, k: int, n: int, dtype=jnp.float32, *,
-                bm: int = 128, bn: int = 128, bk: int = 128) -> BlockPlan:
+                bm: int | None = None, bn: int | None = None,
+                bk: int | None = None) -> BlockPlan:
     """Derive the block plan for a (possibly non-tile-aligned) local shape.
 
-    Blocks are clamped to the (tile-rounded) dims so small problems don't
-    pad all the way to 128, and dims are padded up to a whole number of
-    blocks instead of asserting divisibility.
+    Tile sizes left as ``None`` consult the measured tuning table first
+    (:func:`lookup_tiling`, exact-shape keys) and fall back to
+    ``DEFAULT_TILE``; explicit values always win.  Blocks are clamped to
+    the (tile-rounded) dims so small problems don't pad all the way to
+    128, and dims are padded up to a whole number of blocks instead of
+    asserting divisibility.
     """
+    if bm is None and bn is None and bk is None:
+        tuned = lookup_tiling(e, c, k, n, dtype)
+        if tuned is not None:
+            bm, bn, bk = tuned
+    bm = DEFAULT_TILE if bm is None else bm
+    bn = DEFAULT_TILE if bn is None else bn
+    bk = DEFAULT_TILE if bk is None else bk
     sub = _sublane(dtype)
     bm = min(bm, round_up(c, sub))
     bn = min(bn, round_up(n, 128))
@@ -104,7 +188,11 @@ def _act(out: jax.Array, activation: str) -> jax.Array:
         return jnp.maximum(out, 0.0)
     if activation == "silu":
         return out * (1.0 / (1.0 + jnp.exp(-out)))
-    assert activation == "none", activation
+    if activation != "none":
+        # Real exception, not an assert: under `python -O` an assert is
+        # stripped and an unknown activation would silently run identity.
+        raise ValueError(f"unknown gmm activation: {activation!r} "
+                         f"(expected 'none', 'relu', or 'silu')")
     return out
 
 
@@ -115,7 +203,10 @@ def _act_grad(z: jax.Array, activation: str) -> jax.Array:
     if activation == "silu":
         s = jax.nn.sigmoid(z)
         return s * (1.0 + z * (1.0 - s))
-    assert activation == "none", activation
+    if activation != "none":
+        # Same `python -O` hazard as _act: stripped assert -> grad of 1s.
+        raise ValueError(f"unknown gmm activation: {activation!r} "
+                         f"(expected 'none', 'relu', or 'silu')")
     return jnp.ones_like(z)
 
 
@@ -189,11 +280,14 @@ _gmm.defvjp(_gmm_fwd, _gmm_bwd)
 @functools.partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk",
                                              "interpret"))
 def gmm(x: jax.Array, w: jax.Array, *, activation: str = "none",
-        bm: int = 128, bn: int = 128, bk: int = 128,
+        bm: int | None = None, bn: int | None = None, bk: int | None = None,
         interpret: bool = True) -> jax.Array:
     """[E, C, K] x [E, K, N] -> [E, C, N] with optional fused activation.
 
     Differentiable (custom VJP); non-tile-aligned C/K/N are zero-padded to
-    the :func:`plan_blocks` boundaries and the output trimmed.
+    the :func:`plan_blocks` boundaries and the output trimmed.  Tile sizes
+    left as ``None`` use the measured tuning table / static defaults via
+    :func:`plan_blocks` — each backward-pass GMM re-plans for its own
+    operand shapes, so grad matmuls get their own tuned tiles.
     """
     return _gmm(x, w, activation, bm, bn, bk, interpret)

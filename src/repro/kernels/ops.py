@@ -23,19 +23,19 @@ from repro.kernels import topk_gating as topk_lib
 _INTERPRET = jax.default_backend() != "tpu"
 
 
-def gmm(x, w, *, activation: str = "none", bm=128, bn=128, bk=128):
+def gmm(x, w, *, activation: str = "none", bm=None, bn=None, bk=None):
     return gmm_lib.gmm(x, w, activation=activation, bm=bm, bn=bn, bk=bk,
                        interpret=_INTERPRET)
 
 
 def expert_ffn(params, x, *, activation: str = "relu",
-               bm=128, bn=128, bk=128):
+               bm=None, bn=None, bk=None):
     """Two fused GMMs: up-projection (+act) then down-projection.
 
     x: [E, C, d]; params carries w1 [E,d,f], w2 [E,f,d], (w3 for swiglu).
     Differentiable end-to-end via the GMM custom VJP.  ``bm/bn/bk`` cap
-    the tile walk (the backend layer passes a per-shard block plan here;
-    each GMM still clamps/pads to its own operand dims).
+    the tile walk; left as ``None`` each GMM plans its own operand shapes
+    (measured tuning table, then static defaults — see gmm.plan_blocks).
     """
     dt = x.dtype
     w1 = params["w1"].astype(dt)
@@ -66,18 +66,23 @@ def topk_gating_full(logits, k: int, extra: int = 0, block_t: int = 256):
 
 
 def dispatch(x, eidx, pos, *, n_experts: int, capacity: int,
-             vmem_limit: int | None = None):
-    """Fused capacity-buffer build, [T, d] -> [E, C, d].  Raises
-    ``DispatchVMEMError`` past the VMEM budget (see kernels/dispatch.py)."""
+             vmem_limit: int | None = None, e_block: int | None = None):
+    """Fused capacity-buffer build, [T, d] -> [E, C, d].
+
+    ``e_block=None`` auto-selects the buffer regime against the VMEM
+    budget (resident when it fits, E-blocked slabs otherwise); raises
+    ``DispatchVMEMError`` only when even a one-expert slab exceeds it
+    (see kernels/dispatch.py)."""
     return dispatch_lib.dispatch(x, eidx, pos, n_experts=n_experts,
                                  capacity=capacity, interpret=_INTERPRET,
-                                 vmem_limit=vmem_limit)
+                                 vmem_limit=vmem_limit, e_block=e_block)
 
 
 def combine(buf, w, eidx, pos, *, out_dtype=None,
-            vmem_limit: int | None = None):
-    """Fused weighted combine, [E, C, d] -> [T, d].  Raises
-    ``DispatchVMEMError`` past the VMEM budget (see kernels/dispatch.py)."""
+            vmem_limit: int | None = None, e_block: int | None = None):
+    """Fused weighted combine, [E, C, d] -> [T, d].  Buffer regime as in
+    :func:`dispatch`; raises ``DispatchVMEMError`` only when even a
+    one-expert slab exceeds the budget (see kernels/dispatch.py)."""
     return dispatch_lib.combine(buf, w, eidx, pos, out_dtype=out_dtype,
                                 interpret=_INTERPRET,
-                                vmem_limit=vmem_limit)
+                                vmem_limit=vmem_limit, e_block=e_block)

@@ -64,7 +64,12 @@ def _topk_kernel(logits_ref, w_ref, idx_ref, vals_ref, *, k: int, kk: int):
 def _topk_raw(logits, k, extra, block_t, interpret):
     t, e = logits.shape
     kk = k + extra
-    assert kk <= e, (k, extra, e)
+    if kk > e:
+        # Real exception, not an assert: `python -O` would strip the check
+        # and the kernel would silently pick from out-of-range lanes.
+        raise ValueError(
+            f"top-k gating needs k + extra <= n_experts: "
+            f"k={k} + extra={extra} > E={e}")
     bt = min(block_t, _round_up(t, 8))
     tp = _round_up(t, bt)
     lp = jnp.pad(logits, ((0, tp - t), (0, 0))) if tp != t else logits

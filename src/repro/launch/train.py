@@ -64,6 +64,16 @@ def main():
                     choices=["ref", "pallas"],
                     help="MoE kernel backend override (docs/kernels.md); "
                          "default: the arch config's choice")
+    ap.add_argument("--dispatch-vmem-limit", type=int, default=None,
+                    help="VMEM budget (bytes) for the fused dispatch/"
+                         "combine kernels; past it the pallas backend "
+                         "E-blocks the [E, C, d] buffer")
+    ap.add_argument("--dispatch-e-block", type=int, default=None,
+                    help="force the fused dispatch/combine expert-slab "
+                         "size; default: auto-select against the budget")
+    ap.add_argument("--no-gmm-autotune", action="store_true",
+                    help="ignore the measured GMM tiling table "
+                         "(make tune-kernels) and pin static 128 tiles")
     ap.add_argument("--router-policy", default=None,
                     help="routing policy override (docs/routing.md): "
                          "noisy_topk | batchwise | threshold | "
@@ -80,6 +90,12 @@ def main():
         cfg = reduced(cfg)
     if args.kernel_backend is not None:
         cfg = cfg.replace(kernel_backend=args.kernel_backend)
+    if args.dispatch_vmem_limit is not None:
+        cfg = cfg.replace(dispatch_vmem_limit=args.dispatch_vmem_limit)
+    if args.dispatch_e_block is not None:
+        cfg = cfg.replace(dispatch_e_block=args.dispatch_e_block)
+    if args.no_gmm_autotune:
+        cfg = cfg.replace(gmm_autotune=False)
     # Router flags configure the spec at ONE resolution point: whatever
     # the arch config carries (explicit spec or legacy fields) resolves to
     # a RouterSpec here, the overrides land on it, and the spec rides

@@ -33,6 +33,8 @@ def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
         dispatch_impl=cfg.dispatch_impl, expert_impl=cfg.expert_impl,
         kernel_backend=cfg.kernel_backend,
         dispatch_vmem_limit=cfg.dispatch_vmem_limit,
+        dispatch_e_block=cfg.dispatch_e_block,
+        gmm_autotune=cfg.gmm_autotune,
         wide_dispatch=cfg.moe_wide_dispatch, dtype=cfg.param_dtype)
 
 
@@ -45,7 +47,9 @@ def _hmoe_args(cfg: ModelConfig) -> hmoe.HMoEArgs:
         capacity_factor=cfg.capacity_factor,
         w_importance=cfg.w_importance, w_load=cfg.w_load,
         kernel_backend=cfg.kernel_backend, dispatch_impl=cfg.dispatch_impl,
-        dispatch_vmem_limit=cfg.dispatch_vmem_limit, dtype=cfg.param_dtype)
+        dispatch_vmem_limit=cfg.dispatch_vmem_limit,
+        dispatch_e_block=cfg.dispatch_e_block,
+        gmm_autotune=cfg.gmm_autotune, dtype=cfg.param_dtype)
 
 
 def block_defs(cfg: ModelConfig, kind: LayerKind) -> dict:

@@ -270,8 +270,14 @@ class Scheduler:
         """Legacy whole-prompt admission (kept for scheduler-level tests):
         equivalent to ``schedule_prefill`` with no chunking or budget,
         returning the admitted (slot, request) pairs."""
-        assert self.prefill_chunk <= 0 and self.prefill_budget <= 0, \
-            "use schedule_prefill with chunking/budget configured"
+        if self.prefill_chunk > 0 or self.prefill_budget > 0:
+            # Calling the legacy entry point on a chunking/budget config
+            # would silently drop both knobs — a real exception, not an
+            # assert that `python -O` strips (same policy as retire below).
+            raise ValueError(
+                "Scheduler.admit() is whole-prompt only; use "
+                "schedule_prefill when prefill_chunk/prefill_budget are "
+                "configured")
         before = {id(r) for r in self.slots if r is not None}
         return [(w.slot, w.req)
                 for w in self.schedule_prefill(queue, step)

@@ -319,8 +319,10 @@ def test_hmoe_unknown_backend_raises():
 
 
 # ---------------------------------------------------------------------------
-# VMEM-footprint guard on the fused dispatch/combine kernel (ROADMAP open
-# item 3 guard; the E-blocked variant stays future work)
+# VMEM-footprint guard on the fused dispatch/combine kernel: shapes whose
+# single-expert slab exceeds even the E-blocked budget still raise (kernel
+# level) / fall back to ref with a warning (backend level); everything
+# else now runs fused — see tests/test_kernel_eblock.py
 # ---------------------------------------------------------------------------
 
 def test_dispatch_vmem_guard_raises_directly():
