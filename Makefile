@@ -5,8 +5,8 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test-tier1 test-slow test-all test-kernels test-serve \
-	test-routing bench-micro bench-serve bench-serve-prefix \
-	tune-kernels
+	test-routing test-obs bench-micro bench-serve bench-serve-prefix \
+	bench-replay trace-serve fit-costs replay tune-kernels
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
@@ -40,6 +40,13 @@ test-routing:
 	$(PY) -m pytest -q tests/test_router.py tests/test_gating.py \
 		tests/test_moe.py
 
+# Observability suite (part of tier-1): chrome-trace span schema +
+# traced/untraced bit-identity, typed metrics instruments, and the
+# replay simulator's fidelity contract against a log_decisions engine
+# run (docs/observability.md).
+test-obs:
+	$(PY) -m pytest -q tests/test_obs.py
+
 # The slow tier (multi-device subprocess equivalence, training curves).
 test-slow:
 	$(PY) -m pytest -q -m slow
@@ -61,3 +68,21 @@ bench-serve:
 # merged into an existing BENCH_serve.json).
 bench-serve-prefix:
 	$(PY) benchmarks/serve_bench.py --prefix-only
+
+# Capture a chrome trace of the shared-prefix serve workload ->
+# /tmp/serve_trace.json (open in Perfetto / chrome://tracing).
+trace-serve:
+	$(PY) benchmarks/fit_costs.py --record-to /tmp/serve_trace.json \
+		--out /dev/null
+
+# Record a traced serve run (measuring tracing overhead on the way) and
+# fit the per-op cost model -> COSTS_serve.json.
+fit-costs:
+	$(PY) benchmarks/fit_costs.py
+
+# Replay 100k synthetic requests through the real scheduler under both
+# admission policies -> serve_replay_{fcfs,aware} (+ overhead) rows
+# merged into BENCH_serve.json.  Reuses COSTS_serve.json when present.
+replay:
+	$(PY) benchmarks/replay_bench.py $(if $(wildcard COSTS_serve.json),--costs COSTS_serve.json,)
+bench-replay: replay

@@ -1,9 +1,56 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission.
+
+Timer hygiene (ROADMAP housekeeping): every suite times with
+``time.perf_counter_ns`` (monotonic, ns resolution — float seconds from
+``perf_counter`` lose precision exactly where µs-scale kernel calls
+live) and reports either best-of-N (:func:`best_of`, for cross-commit
+comparisons: this host has ~10ms fixed per-jitted-call cost and ±10–20%
+wall noise) or an interpolated percentile (:func:`pctl`, for tail
+measurements like per-step head-of-line stalls).  Suites must not hand-
+roll their own min/percentile loops — one implementation, one set of
+conventions.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
+
+
+def wall_ns(fn, *args) -> int:
+    """One blocking call of ``fn(*args)``, wall time in integer ns."""
+    t0 = time.perf_counter_ns()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter_ns() - t0
+
+
+def pctl(samples, p: float) -> float:
+    """Interpolated percentile (``p`` in [0, 100]) of a sample list.
+    Matches ``numpy.percentile``'s default linear interpolation; kept
+    dependency-free so host-only suites can import it."""
+    if not samples:
+        raise ValueError("pctl of an empty sample list")
+    s = sorted(samples)
+    if len(s) == 1:
+        return float(s[0])
+    rank = p / 100.0 * (len(s) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(s) - 1)
+    return float(s[lo] + (s[hi] - s[lo]) * (rank - lo))
+
+
+def best_of(run, n: int = 3, *, warmup: int = 1, key=None):
+    """Warm caches with ``warmup`` calls, then return the best of ``n``
+    results of ``run()`` — "best" meaning minimal ``key(result)``
+    (default: the result's ``"wall_s"`` entry; pass ``key=float`` style
+    callables for plain-number runs).  This is the ROADMAP best-of-N
+    discipline: scheduling/compute are deterministic, only the wall
+    clock varies with host noise, so min is the low-noise estimator."""
+    if key is None:
+        key = lambda r: r["wall_s"]  # noqa: E731
+    for _ in range(warmup):
+        run()
+    return min((run() for _ in range(n)), key=key)
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5,
@@ -16,14 +63,9 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5,
     tuner) should rank by best-of-N, not single-shot means."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
+    times = sorted(wall_ns(fn, *args) for _ in range(iters))
     pick = times[0] if reduce == "best" else times[len(times) // 2]
-    return pick * 1e6
+    return pick / 1e3
 
 
 ROWS: list[dict] = []           # every emit() lands here for JSON export

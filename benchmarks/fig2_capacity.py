@@ -50,10 +50,10 @@ def run(steps: int = 500):
             lambda p, b, r: paper_lm_loss(p, b, cfg, rng=r), oc))
         state = {"params": params, "opt": opt_lib.init(params, oc)}
         it = DataIterator(dc)
-        t0 = time.perf_counter()
+        t0 = time.perf_counter_ns()
         for s in range(steps):
             state, _ = step(state, next(it), jax.random.PRNGKey(s))
-        us = (time.perf_counter() - t0) / steps * 1e6
+        us = (time.perf_counter_ns() - t0) / steps / 1e3
         test = batch_at(dc, 20_000)
         _, tm = paper_lm_loss(state["params"], test, cfg, train=False)
         ppl = float(tm["perplexity"])

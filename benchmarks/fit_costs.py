@@ -1,0 +1,137 @@
+"""Fit a serve cost model from a recorded chrome trace.
+
+Two modes:
+
+* ``--trace PATH`` — fit from an existing trace (any ``ServeEngine`` run
+  with ``ServeConfig.trace_path`` set, e.g. ``make trace-serve``);
+* no ``--trace`` — record one first: the shared-prefix serve workload
+  (serve_bench's ``serve_prefix_on`` shape) runs once untraced and once
+  traced (best-of-3 each, shared timer discipline), which also measures
+  the tracing overhead the ISSUE bounds (<2%) and checks traced/untraced
+  greedy outputs are bit-identical.
+
+Output: a JSON cost table (``--out``, default COSTS_serve.json) of per-op
+linear fits ``dur_s ~ a*x + b`` — the input to ``repro.obs.replay`` and
+``benchmarks/replay_bench.py`` (docs/observability.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def build_engine_and_trace(trace_path: str | None = None,
+                           sync: bool = True):
+    """The serve_prefix_on workload: 12 requests sharing a 192-token
+    prefix, chunked prefill + aware admission + prefix cache on.
+    ``sync=True`` is calibration mode (block inside spans so each span's
+    duration is that op's real wall — what the cost model fits on)."""
+    from benchmarks.serve_bench import N_SLOTS, _setup
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg, params = _setup()
+    rng = np.random.RandomState(7)
+    shared = rng.randint(1, cfg.vocab_size, (192,)).astype(np.int32)
+    trace = [(np.concatenate([shared,
+                              rng.randint(1, cfg.vocab_size, (32,))
+                              .astype(np.int32)]),
+              8, 0 if i == 0 else 16)
+             for i in range(12)]
+    sc = ServeConfig(max_len=256, n_slots=N_SLOTS, prefill_chunk=64,
+                     prefill_budget=128, admission="aware",
+                     prefix_cache=True, trace_path=trace_path,
+                     trace_sync=sync)
+    return ServeEngine(params, cfg, sc), trace
+
+
+def record(trace_path: str, pairs: int = 8) -> dict:
+    """Run the workload untraced / traced (default mode) / traced
+    (calibration mode, ``trace_sync=True``) in interleaved rounds, write
+    the calibration trace, and return overhead/identity measurements.
+
+    Interleaving matters: host wall on this workload drifts ±10-20%
+    over a script's lifetime, far above the effect being measured, so
+    back-to-back best-of-N blocks mostly measure the drift.  Round-robin
+    runs with min-vs-min comparison cancel it.  ``overhead`` is the
+    default tracing mode (span appends only — what ``--trace`` costs);
+    ``overhead_sync`` is calibration mode, which additionally blocks on
+    device results inside each span (exact per-op attribution for the
+    cost fit, paid for in lost host/device overlap).  Every calibration
+    replay's spans are kept (tracer events accumulate) — more samples
+    for the fit.
+    """
+    from benchmarks.serve_bench import _run_trace
+
+    eng_off, trace = build_engine_and_trace(None)
+    eng_on, _ = build_engine_and_trace(trace_path + ".default",
+                                       sync=False)
+    eng_cal, _ = build_engine_and_trace(trace_path, sync=True)
+    off0 = _run_trace(eng_off, trace)    # warmup / compile, all engines
+    on0 = _run_trace(eng_on, trace)
+    _run_trace(eng_cal, trace)
+    eng_cal.tracer.clear()  # drop warmup spans: they time jit compiles,
+    offs, ons, cals = [], [], []   # not the steady state the model fits
+    for _ in range(pairs):
+        offs.append(_run_trace(eng_off, trace)["wall_s"])
+        eng_on.tracer.clear()
+        ons.append(_run_trace(eng_on, trace)["wall_s"])
+        cals.append(_run_trace(eng_cal, trace)["wall_s"])
+    eng_cal.tracer.save()  # _run_trace drives step() directly, save here
+    return {
+        "trace_path": trace_path,
+        "untraced_wall_s": min(offs),
+        "traced_wall_s": min(ons),
+        "calibration_wall_s": min(cals),
+        "overhead": min(ons) / min(offs) - 1.0,
+        "overhead_sync": min(cals) / min(offs) - 1.0,
+        "pairs": pairs,
+        "events": len(eng_cal.tracer.events),
+        "bit_identical": off0["out_tokens"] == on0["out_tokens"],
+    }
+
+
+def fit(trace_path: str):
+    from repro.obs.replay import CostModel
+    return CostModel.fit_trace(trace_path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None,
+                    help="existing chrome-trace JSON to fit from "
+                         "(default: record one from the shared-prefix "
+                         "serve workload)")
+    ap.add_argument("--record-to", default="/tmp/serve_costs_trace.json",
+                    help="where the recorded trace lands when --trace is "
+                         "not given")
+    ap.add_argument("--out", default="COSTS_serve.json",
+                    help="cost-model JSON output path")
+    args = ap.parse_args()
+
+    meta = {}
+    trace_path = args.trace
+    if trace_path is None:
+        meta = record(args.record_to)
+        trace_path = args.record_to
+        print(f"[fit-costs] recorded {meta['events']} events; tracing "
+              f"overhead {meta['overhead']*100:+.2f}% "
+              f"(calibration mode {meta['overhead_sync']*100:+.2f}%; "
+              f"untraced {meta['untraced_wall_s']:.3f}s -> traced "
+              f"{meta['traced_wall_s']:.3f}s), "
+              f"bit_identical={meta['bit_identical']}")
+    model = fit(trace_path)
+    print(f"[fit-costs] {len(model.ops)} ops fitted from {trace_path}:")
+    for name, oc in sorted(model.ops.items()):
+        print(f"  {name:24s} a={oc.a:.3e} s/x  b={oc.b:.3e} s  (n={oc.n})")
+    payload = {"trace": trace_path, "ops": model.to_dict(), **meta}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[fit-costs] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, ".")
+    main()

@@ -1,0 +1,131 @@
+"""Replay-simulator benchmark: admission policies at 100k-request scale.
+
+Runs the cost-model replay simulator (``repro.obs.replay``) over a 100k
+synthetic request trace twice — ``admission="fcfs"`` vs ``"aware"`` —
+and emits one row per policy:
+
+  serve_replay_fcfs    us = sim runtime on this host;  derived:
+  serve_replay_aware     predicted wall, p50/p95/p99 request latency
+                         (steps and predicted seconds), prefix hits
+
+The whole point of the simulator is this comparison: the same scheduler
+code the engine runs, driven over traffic volumes no devicebound bench
+could touch (100k requests replay in seconds), with wall predictions
+from costs fitted to a real traced run.  A third row,
+``serve_trace_overhead``, records what the span capture itself costs the
+engine (the ISSUE bounds it <2%) whenever this run had to record a fresh
+calibration trace.
+
+Standalone (``make bench-replay``) merges rows into BENCH_serve.json the
+same way ``serve_bench --prefix-only`` does; pass ``--costs PATH`` to
+reuse a COSTS_serve.json from ``make fit-costs`` and skip the device
+recording entirely.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import ROWS, emit
+
+N_REQUESTS = 100_000
+
+
+def _get_model(costs_path: str | None):
+    """Cost model from a COSTS_serve.json, else record + fit one now
+    (returns the overhead measurements only in the latter case)."""
+    from repro.obs.replay import CostModel
+
+    if costs_path and os.path.exists(costs_path):
+        with open(costs_path) as f:
+            payload = json.load(f)
+        return CostModel.from_dict(payload["ops"]), None
+    from benchmarks import fit_costs
+    meta = fit_costs.record("/tmp/serve_costs_trace.json")
+    return CostModel.fit_trace(meta["trace_path"]), meta
+
+
+def run(costs_path: str | None = None) -> None:
+    from repro.obs import replay as rp
+
+    model, meta = _get_model(costs_path)
+    if meta is not None:
+        emit("serve_trace_overhead", meta["traced_wall_s"] * 1e6,
+             f"overhead={meta['overhead']*100:+.2f}%;"
+             f"overhead_sync={meta['overhead_sync']*100:+.2f}%;"
+             f"untraced_s={meta['untraced_wall_s']:.3f};"
+             f"events={meta['events']};"
+             f"bit_identical={meta['bit_identical']}")
+
+    # Mixed traffic just under the pool's prefill-limited service rate:
+    # 192-token prompts (4 budget-filling chunks each, post-prefix-hit)
+    # interleave with 16-token ones, so a long head-of-line prompt
+    # claiming a slot with no budget left is common — exactly where the
+    # two admission policies diverge.  Sustained *over*load is avoided
+    # on purpose: the queue would grow without bound and the aware
+    # policy's per-pop fits-scan over it (real RequestQueue behavior)
+    # would dominate sim runtime.
+    reqs = rp.synthetic_requests(
+        N_REQUESTS, prompt_lens=(16, 192), new_tokens=(4, 16),
+        arrival_every=1.8, shared_prefix=64, seed=1)
+    results = {}
+    for adm in ("fcfs", "aware"):
+        cfg = rp.ReplayConfig(n_slots=8, admission=adm, prefill_chunk=32,
+                              prefill_budget=32, prefix_cache=True,
+                              max_len=256)
+        t0 = time.perf_counter_ns()
+        res = rp.replay(reqs, cfg, model)
+        sim_s = (time.perf_counter_ns() - t0) / 1e9
+        results[adm] = (res, sim_s)
+        steps = res.metrics.get("request_latency_steps")
+        secs = res.metrics.get("request_latency_s")
+        emit(f"serve_replay_{adm}", sim_s * 1e6,
+             f"requests={N_REQUESTS};steps={res.steps};"
+             f"pred_wall_s={res.predicted_wall_s:.1f};"
+             f"lat_steps_p50={steps.p50:.0f};"
+             f"lat_steps_p95={steps.p95:.0f};"
+             f"lat_steps_p99={steps.p99:.0f};"
+             f"lat_s_p95={secs.p95:.2f};"
+             f"prefix_hits={res.stats['prefix_hits']}")
+    aware, fcfs = results["aware"][0], results["fcfs"][0]
+    p95_f = fcfs.metrics.get("request_latency_steps").p95
+    p95_a = aware.metrics.get("request_latency_steps").p95
+    print(f"[replay] aware vs fcfs: p95 latency {p95_f:.0f} -> "
+          f"{p95_a:.0f} steps ({p95_f / max(p95_a, 1e-9):.2f}x), "
+          f"predicted wall {fcfs.predicted_wall_s:.1f}s -> "
+          f"{aware.predicted_wall_s:.1f}s")
+
+
+if __name__ == "__main__":
+    import platform
+    import sys
+
+    sys.path.insert(0, ".")
+    costs = None
+    argv = sys.argv[1:]
+    if "--costs" in argv:
+        costs = argv[argv.index("--costs") + 1]
+    start = len(ROWS)
+    print("name,us_per_call,derived")
+    run(costs)
+    import jax
+    new_rows = ROWS[start:]
+    payload = {
+        "suites": ["serve"],
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "rows": new_rows,
+    }
+    if os.path.exists("BENCH_serve.json"):
+        # merge: replace same-name rows in place, append new ones
+        with open("BENCH_serve.json") as f:
+            payload = json.load(f)
+        by_name = {r["name"]: r for r in new_rows}
+        payload["rows"] = [by_name.pop(r["name"], r)
+                           for r in payload["rows"]] + list(by_name.values())
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] wrote {len(new_rows)} rows to BENCH_serve.json")

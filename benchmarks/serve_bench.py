@@ -42,7 +42,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import ROWS, emit
+from benchmarks.common import ROWS, best_of, emit, pctl
 
 # (name, prompt-length cycle, new-token cycle): short-uniform traffic, a
 # long-prompt mix, and a skewed output mix (the worst case for drains).
@@ -72,13 +72,13 @@ def _run_trace(engine, trace) -> dict:
     every live decode slot waits out exactly that wall time)."""
     engine.reset()
     reqs = [engine.submit(p, m, arrival=a) for p, m, a in trace]
-    step_walls = []
-    t0 = time.perf_counter()
+    step_walls_ns = []
+    t0 = time.perf_counter_ns()
     while engine.queue or engine.sched.active():
-        s0 = time.perf_counter()
+        s0 = time.perf_counter_ns()
         engine.step()
-        step_walls.append(time.perf_counter() - s0)
-    dt = time.perf_counter() - t0
+        step_walls_ns.append(time.perf_counter_ns() - s0)
+    dt = (time.perf_counter_ns() - t0) / 1e9
     assert all(r.done for r in reqs)
     lat = [r.finished_step - r.arrival for r in reqs]
     return {
@@ -88,21 +88,19 @@ def _run_trace(engine, trace) -> dict:
         "decode_steps": engine.stats["decode_steps"],
         "util": engine.slot_utilization,
         "mean_latency_steps": float(np.mean(lat)),
-        "p95_latency_steps": float(np.percentile(lat, 95)),
-        "step_max_ms": float(np.max(step_walls) * 1e3),
-        "step_p95_ms": float(np.percentile(step_walls, 95) * 1e3),
+        "p95_latency_steps": pctl(lat, 95),
+        "step_max_ms": max(step_walls_ns) / 1e6,
+        "step_p95_ms": pctl(step_walls_ns, 95) / 1e6,
         # greedy output streams, for cross-config bit-identity checks
         "out_tokens": tuple(tuple(r.tokens) for r in reqs),
     }
 
 
 def _best_of(engine, trace, n: int = 3) -> dict:
-    """Warm the jit caches, then keep the fastest of ``n`` replays
+    """Best-of-N trace replays via the shared ``common.best_of`` helper
     (scheduling is deterministic, so stats/outputs are identical across
     replays — only the wall clock varies with host noise)."""
-    _run_trace(engine, trace)
-    return min((_run_trace(engine, trace) for _ in range(n)),
-               key=lambda r: r["wall_s"])
+    return best_of(lambda: _run_trace(engine, trace), n)
 
 
 def _setup():

@@ -17,6 +17,15 @@ with no signal; this registry is the fix).  Selection order:
 ``MoEArgs.kernel_backend`` if set, else the legacy ``expert_impl`` field
 ("pallas" -> pallas, anything else -> ref).
 
+Observability: every backend call site (dispatch / expert-FFN GMM /
+combine) runs under an ambient-tracer span (``kernel.dispatch`` /
+``kernel.gmm`` / ``kernel.combine`` with backend + shape attrs,
+``repro.obs.trace.current()``).  These sites execute during ``jax.jit``
+*tracing*, so a recorded span measures trace/staging time at the step
+that triggered compilation — per-call device time lives in the host-side
+step spans (serve/train) that block on results.  With no tracer
+installed the span is the shared no-op (docs/observability.md).
+
 MeshContext awareness
 ---------------------
 Backends consume the explicit sharding context (ROADMAP open item 3):
@@ -42,6 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch as dsp
+from repro.obs import trace as trace_lib
 from repro.sharding import context as ctx_lib
 
 log = logging.getLogger(__name__)
@@ -202,33 +212,39 @@ def _dispatch_impl(a) -> str:
 # ---------------------------------------------------------------------------
 
 def _ref_expert_ffn(params, x, a, *, ctx=None):
-    w1 = params["w1"].astype(a.dtype)
-    w2 = params["w2"].astype(a.dtype)
-    h = jnp.einsum("ecd,edf->ecf", x, w1,
-                   preferred_element_type=jnp.float32)
-    if a.activation == "swiglu":
-        g = jnp.einsum("ecd,edf->ecf", x, params["w3"].astype(a.dtype),
+    with trace_lib.current().span("kernel.gmm", backend="ref",
+                                  shape=tuple(x.shape)):
+        w1 = params["w1"].astype(a.dtype)
+        w2 = params["w2"].astype(a.dtype)
+        h = jnp.einsum("ecd,edf->ecf", x, w1,
                        preferred_element_type=jnp.float32)
-        h = jax.nn.silu(h) * g
-    else:
-        h = jax.nn.relu(h)
-    h = h.astype(a.dtype)
-    return jnp.einsum("ecf,efd->ecd", h, w2,
-                      preferred_element_type=jnp.float32).astype(a.dtype)
+        if a.activation == "swiglu":
+            g = jnp.einsum("ecd,edf->ecf", x, params["w3"].astype(a.dtype),
+                           preferred_element_type=jnp.float32)
+            h = jax.nn.silu(h) * g
+        else:
+            h = jax.nn.relu(h)
+        h = h.astype(a.dtype)
+        return jnp.einsum("ecf,efd->ecd", h, w2,
+                          preferred_element_type=jnp.float32).astype(a.dtype)
 
 
 def _ref_dispatch(x, p, a, *, ctx=None):
     p = _as_plan(p)
-    if _dispatch_impl(a) == "einsum":
-        return dsp.dispatch_einsum(x, p)
-    return dsp.dispatch(x, p)
+    with trace_lib.current().span("kernel.dispatch", backend="ref",
+                                  tokens=int(x.shape[0])):
+        if _dispatch_impl(a) == "einsum":
+            return dsp.dispatch_einsum(x, p)
+        return dsp.dispatch(x, p)
 
 
 def _ref_combine(buf, p, a, *, dtype=None, ctx=None):
     p = _as_plan(p)
-    if _dispatch_impl(a) == "einsum":
-        return dsp.combine_einsum(buf, p, dtype=dtype)
-    return dsp.combine(buf, p, dtype=dtype)
+    with trace_lib.current().span("kernel.combine", backend="ref",
+                                  shape=tuple(buf.shape)):
+        if _dispatch_impl(a) == "einsum":
+            return dsp.combine_einsum(buf, p, dtype=dtype)
+        return dsp.combine(buf, p, dtype=dtype)
 
 
 register(KernelBackend(name="ref", expert_ffn=_ref_expert_ffn,
@@ -287,7 +303,10 @@ def _register_pallas() -> None:
             from repro.kernels import gmm as gmm_lib
             tiles = dict(bm=gmm_lib.DEFAULT_TILE, bn=gmm_lib.DEFAULT_TILE,
                          bk=gmm_lib.DEFAULT_TILE)
-        return ops.expert_ffn(params, x, activation=a.activation, **tiles)
+        with trace_lib.current().span("kernel.gmm", backend="pallas",
+                                      shape=tuple(x.shape)):
+            return ops.expert_ffn(params, x, activation=a.activation,
+                                  **tiles)
 
     def _pallas_dispatch(x, p, a, *, ctx=None):
         p = _as_plan(p)
@@ -297,13 +316,15 @@ def _register_pallas() -> None:
         ok, e_block = _plan_e_block(a, p.n_experts, p.capacity,
                                     x.shape[-1], x.dtype, x.shape[0],
                                     "dispatch")
-        if not ok:
-            return dsp.dispatch(x, p)
-        return ops.dispatch(x, p.expert_index, p.position,
-                            n_experts=p.n_experts, capacity=p.capacity,
-                            vmem_limit=getattr(a, "dispatch_vmem_limit",
-                                               None),
-                            e_block=e_block)
+        with trace_lib.current().span("kernel.dispatch", backend="pallas",
+                                      tokens=int(x.shape[0]), fused=ok):
+            if not ok:
+                return dsp.dispatch(x, p)
+            return ops.dispatch(x, p.expert_index, p.position,
+                                n_experts=p.n_experts, capacity=p.capacity,
+                                vmem_limit=getattr(a, "dispatch_vmem_limit",
+                                                   None),
+                                e_block=e_block)
 
     def _pallas_combine(buf, p, a, *, dtype=None, ctx=None):
         p = _as_plan(p)
@@ -314,13 +335,15 @@ def _register_pallas() -> None:
         ok, e_block = _plan_e_block(a, buf.shape[0], buf.shape[1],
                                     buf.shape[2], buf.dtype, n_tok,
                                     "combine")
-        if not ok:
-            return dsp.combine(buf, p, dtype=dtype)
-        return ops.combine(buf, p.weight, p.expert_index, p.position,
-                           out_dtype=dtype or buf.dtype,
-                           vmem_limit=getattr(a, "dispatch_vmem_limit",
-                                              None),
-                           e_block=e_block)
+        with trace_lib.current().span("kernel.combine", backend="pallas",
+                                      shape=tuple(buf.shape), fused=ok):
+            if not ok:
+                return dsp.combine(buf, p, dtype=dtype)
+            return ops.combine(buf, p.weight, p.expert_index, p.position,
+                               out_dtype=dtype or buf.dtype,
+                               vmem_limit=getattr(a, "dispatch_vmem_limit",
+                                                  None),
+                               e_block=e_block)
 
     def _pallas_topk(noisy, k, kk):
         w, idx, vals = ops.topk_gating_full(noisy, k, extra=kk - k)

@@ -78,6 +78,17 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give every request the same N-token prompt "
                          "prefix (exercises --prefix-cache)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a chrome-trace JSON of the run here "
+                         "(Perfetto-loadable; docs/observability.md)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="calibration tracing: block on device results "
+                         "inside prefill/decode spans so durations are "
+                         "real op walls (costs ~2%% lost overlap; what "
+                         "the cost-model fit wants)")
+    ap.add_argument("--log-decisions", action="store_true",
+                    help="record per-step scheduler StepDecision entries "
+                         "(the replay simulator's fidelity contract)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -121,7 +132,10 @@ def main():
         prefill_budget=args.prefill_budget,
         admission=args.admission,
         prefix_cache=args.prefix_cache,
-        prefix_cache_bytes=args.prefix_cache_bytes), ctx=ctx)
+        prefix_cache_bytes=args.prefix_cache_bytes,
+        trace_path=args.trace,
+        trace_sync=args.trace_sync,
+        log_decisions=args.log_decisions), ctx=ctx)
     rng = np.random.RandomState(0)
     shared = rng.randint(1, cfg.vocab_size,
                          (min(args.shared_prefix, args.prompt_len),))
@@ -165,6 +179,12 @@ def main():
         over = engine.stats["overflow_total"]
         print(f"[serve] expert load (decode): {load.astype(int).tolist()} "
               f"(capacity overflow: {over:.0f})")
+    if args.trace:
+        print(f"[serve] trace written: {args.trace} "
+              f"({len(engine.tracer.events)} events; load in Perfetto)")
+    if args.log_decisions:
+        print(f"[serve] decision log: {len(engine.sched.decision_log)} "
+              "scheduling steps recorded")
     print(f"[serve] sample: {reqs[0].tokens[:10]}")
 
 

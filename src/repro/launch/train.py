@@ -83,6 +83,9 @@ def main():
     ap.add_argument("--eval-capacity-factor", type=float, default=None,
                     help="eval capacity-factor override (RouterSpec)")
     ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a chrome-trace JSON of the run here "
+                         "(train.step spans; docs/observability.md)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -136,8 +139,12 @@ def main():
                              checkpoint_every=args.checkpoint_every,
                              log_every=10),
         data_iter=DataIterator(dc), workdir=args.workdir,
-        kernel_backend=cfg.kernel_backend, router=cfg.router)
+        kernel_backend=cfg.kernel_backend, router=cfg.router,
+        trace_path=args.trace)
     final = trainer.run()
+    if args.trace:
+        print(f"[train] trace written: {args.trace} "
+              f"({len(trainer.tracer.events)} events; load in Perfetto)")
     print(f"[train] done: {final}")
 
 

@@ -1,0 +1,19 @@
+"""Serve/train observability subsystem (docs/observability.md).
+
+Three layers, each usable on its own:
+
+* :mod:`repro.obs.trace` — chrome-trace span capture (Perfetto /
+  ``chrome://tracing`` loadable JSON) with a null tracer so untraced hot
+  paths pay a single attribute read;
+* :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram instruments in
+  a :class:`~repro.obs.metrics.MetricsRegistry` (bounded memory,
+  p50/p95/p99 from fixed buckets);
+* :mod:`repro.obs.replay` — a :class:`~repro.obs.replay.CostModel` fitted
+  from recorded traces plus a replay simulator that re-runs the *real*
+  scheduler stack against simulated step costs (imported lazily — it
+  pulls in the serve stack; ``import repro.obs.replay`` explicitly).
+
+Only the dependency-free layers are imported eagerly so low-level modules
+(kernels, models) can import ``repro.obs.trace`` without cycles.
+"""
+from repro.obs import metrics, trace  # noqa: F401

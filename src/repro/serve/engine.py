@@ -37,9 +37,16 @@ model).  The handoff is an explicit ``MeshContext.reshard`` — device_put
 of the prefilled page onto the decode plan — before the page is inserted
 into the slot pool (ROADMAP: the prefill→decode boundary now reshards).
 
-Telemetry: every decode step records the summed per-expert load and
-capacity-overflow counters from the gating path (``engine.telemetry``),
-so serving-time expert skew is observable per step.
+Observability (docs/observability.md): the engine's bookkeeping lives in
+a typed ``MetricsRegistry`` (``engine.metrics``; the legacy ``.stats``
+dict is a property view over it), per-step MoE expert load / overflow
+aggregates into bounded histogram/counter instruments plus a
+``keep_last_n`` ring of raw entries (``engine.telemetry``), and — with
+``ServeConfig.trace_path`` set — every step emits chrome-trace spans
+(admission, prefix probe/hit, chunk-group prefills with [G, C] attrs,
+blend, reshard, decode, sample, retire) that load in Perfetto and feed
+the cost-model replay simulator (``repro.obs.replay``).  Tracing off is
+the default and costs one no-op context manager per span site.
 
 Batching-invariance caveat: all pool slots (active *and* dead) share the
 MoE capacity buffers of one fused decode, so greedy outputs are
@@ -51,6 +58,7 @@ step determines what drops — exactly the events the per-step
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -60,8 +68,11 @@ import numpy as np
 from repro.common import param as pm
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.obs import metrics as metrics_lib
+from repro.obs import trace as trace_lib
 from repro.serve.kv_cache import PrefixCache, SlotKVCache
-from repro.serve.scheduler import Request, RequestQueue, Scheduler
+from repro.serve.scheduler import (Request, RequestQueue, Scheduler,
+                                   chunk_rounds)
 from repro.sharding import context as ctx_lib
 
 
@@ -133,6 +144,31 @@ class ServeConfig:
     # Accounting charges the full per-page byte size for every entry;
     # pinned entries (in-flight prefills) are never evicted.
     prefix_cache_bytes: int = 1 << 30
+    # Chrome-trace span capture (docs/observability.md): when set, every
+    # engine step records spans (schedule, prefix probe/hit, chunk-group
+    # prefill with [G, C] attrs, blend, reshard, decode, sample, retire)
+    # and ``run()`` writes a Perfetto-loadable trace here.  None (the
+    # default) installs the null tracer: the hot path pays one no-op
+    # context manager per span site and outputs stay bit-identical.
+    trace_path: str | None = None
+    # Calibration tracing: block on device results *inside* the prefill/
+    # decode spans so each span's duration is that op's real wall (what
+    # the replay cost model fits on — ``make fit-costs`` sets this).
+    # Off (the default), spans record dispatch time and device time
+    # drains at the step's natural sync points: the trace stays accurate
+    # at step granularity and the capture overhead is the span appends
+    # alone (<1% on the serve bench; the syncs cost another ~2% in lost
+    # host/device overlap — docs/observability.md §Overhead discipline).
+    trace_sync: bool = False
+    # Capture scheduler decisions (admission order, chunk plan, prefix
+    # hits) as StepDecision records on ``engine.sched.decision_log`` —
+    # the fidelity contract the replay simulator reproduces.
+    log_decisions: bool = False
+    # Raw per-step MoE telemetry entries kept for inspection (a bounded
+    # ring — the aggregate histogram/counter instruments in
+    # ``engine.metrics`` cover the full run, so a week-long serve no
+    # longer grows an unbounded list).
+    telemetry_keep_last_n: int = 512
 
 
 class ServeEngine:
@@ -141,6 +177,11 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.sc = sc
+        # Tracing off => the shared null tracer: every span site below
+        # costs one attribute read + a no-op context manager.
+        self.tracer = (trace_lib.Tracer(sc.trace_path, process_name="serve")
+                       if sc.trace_path else trace_lib.NULL)
+        self._trace_sync = self.tracer.enabled and sc.trace_sync
         self.ctx = ctx or ctx_lib.MeshContext.null(plan=sc.decode_plan)
         on_mesh = self.ctx.mesh is not None
         self.decode_ctx = (self.ctx.with_plan(sc.decode_plan) if on_mesh
@@ -273,19 +314,31 @@ class ServeEngine:
             prefill_budget=self.sc.prefill_budget,
             prefix_probe=self._prefix_probe if self._prefix_on else None,
             on_admit=self._on_admit if self._prefix_on else None)
+        if self.sc.log_decisions:
+            self.sched.decision_log = []
         self.step_count = 0
-        self.telemetry: list[dict] = []
         self.prefill_lengths: set[int] = set()   # distinct compiled shapes
         self.chunk_offsets: set[int] = set()     # distinct chunk compiles
-        self.stats = {"prefills": 0, "decode_steps": 0, "reshards": 0,
-                      "generated_tokens": 0, "slot_steps_active": 0,
-                      "slot_steps_total": 0, "overflow_total": 0.0,
-                      "prefill_chunks": 0, "prefill_tokens": 0,
-                      # device prefill calls: < prefill_chunks when
-                      # cross-slot chunk batching groups same-offset
-                      # work-items into one multi-row call
-                      "prefill_calls": 0,
-                      "prefix_hits": 0, "prefix_hit_tokens": 0}
+        # Raw per-step MoE telemetry: a bounded ring (the full-run view
+        # lives in the aggregate instruments below).
+        self._telemetry = collections.deque(
+            maxlen=max(self.sc.telemetry_keep_last_n, 0) or None)
+        # Typed metrics registry (docs/observability.md).  The counter
+        # names are the legacy engine.stats keys — the ``stats`` property
+        # renders them as the same plain dict existing tests/benches read.
+        # prefill_calls counts device prefill calls: < prefill_chunks when
+        # cross-slot chunk batching groups same-offset work-items into one
+        # multi-row call.
+        self.metrics = metrics_lib.MetricsRegistry()
+        self._c = {name: self.metrics.counter(name) for name in (
+            "prefills", "decode_steps", "reshards", "generated_tokens",
+            "slot_steps_active", "slot_steps_total", "overflow_total",
+            "prefill_chunks", "prefill_tokens", "prefill_calls",
+            "prefix_hits", "prefix_hit_tokens")}
+        self._h_overflow = self.metrics.histogram("decode_overflow_per_step")
+        self._h_active = self.metrics.histogram("decode_active_slots")
+        self._c_expert_load = self.metrics.counter("decode_expert_load",
+                                                   labels=("expert",))
 
     def submit(self, prompt, max_new_tokens: int, arrival: int = 0
                ) -> Request:
@@ -357,24 +410,27 @@ class ServeEngine:
         ``i == max_new_tokens - 1``, so a terminal EOS was reported as a
         length stop)."""
         req.tokens.append(int(tok))
-        self.stats["generated_tokens"] += 1
+        self._c["generated_tokens"].inc()
         if self.sc.eos_id >= 0 and int(tok) == self.sc.eos_id:
             req.done_reason = "eos"
         elif len(req.tokens) >= req.max_new_tokens:
             req.done_reason = "length"
         if req.done:
             req.finished_step = self.step_count
-            self.sched.retire(slot)
-            if self.prefix is not None and not self.prefix.covered(
-                    req.prompt):
-                # Retirement feeds the trie: the slot page's prompt span
-                # [0, prompt_len) is canonical chunk-prefill output (KV
-                # the decode steps wrote lives at positions >= prompt_len
-                # — inside the page but outside any possible hit, so it
-                # rides along inert).  covered() keeps the hot path free
-                # of extracts when the prefix is already cached.
-                self.prefix.insert(req.prompt, self.kv.extract(slot))
-            self.kv.release(slot)
+            with self.tracer.span("serve.retire", rid=req.rid, slot=slot,
+                                  reason=req.done_reason):
+                self.sched.retire(slot)
+                if self.prefix is not None and not self.prefix.covered(
+                        req.prompt):
+                    # Retirement feeds the trie: the slot page's prompt
+                    # span [0, prompt_len) is canonical chunk-prefill
+                    # output (KV the decode steps wrote lives at positions
+                    # >= prompt_len — inside the page but outside any
+                    # possible hit, so it rides along inert).  covered()
+                    # keeps the hot path free of extracts when the prefix
+                    # is already cached.
+                    self.prefix.insert(req.prompt, self.kv.extract(slot))
+                self.kv.release(slot)
 
     def _bucket_len(self, plen: int) -> int:
         """Power-of-two length bucket for a prompt (clamped to the page)."""
@@ -404,29 +460,38 @@ class ServeEngine:
         valid[0, :plen] = 1.0
         self.prefill_lengths.add(blen)
         tokens = jnp.asarray(padded, jnp.int32)[None, :]
-        logits, page = self._prefill(self.params, {"tokens": tokens},
-                                     self._blank_page,
-                                     jnp.asarray(plen - 1, jnp.int32),
-                                     jnp.asarray(valid))
+        tr = self.tracer
+        with tr.span("serve.prefill", rid=req.rid, slot=slot, plen=plen,
+                     tokens=blen):
+            logits, page = self._prefill(self.params, {"tokens": tokens},
+                                         self._blank_page,
+                                         jnp.asarray(plen - 1, jnp.int32),
+                                         jnp.asarray(valid))
+            if self._trace_sync:
+                logits = jax.block_until_ready(logits)
         if self.ctx.mesh is not None:
             # prefill_tp -> decode_std boundary: explicit reshard of the
             # page onto the decode plan before it joins the slot pool.
-            page = self.decode_ctx.reshard(page, self.kv.seq_defs)
-            self.stats["reshards"] += 1
-        self.kv.insert(slot, page, req.prompt_len)
-        self.stats["prefills"] += 1
-        self.stats["prefill_calls"] += 1
-        self.stats["prefill_tokens"] += plen
+            with tr.span("serve.reshard", rid=req.rid, slot=slot):
+                page = self.decode_ctx.reshard(page, self.kv.seq_defs)
+            self._c["reshards"].inc()
+        with tr.span("serve.kv_insert", slot=slot):
+            self.kv.insert(slot, page, req.prompt_len)
+        self._c["prefills"].inc()
+        self._c["prefill_calls"].inc()
+        self._c["prefill_tokens"].inc(plen)
         req.prefill_pos = plen
         req.first_token_step = self.step_count
-        tok = self._sample_rows(logits, [req])[0]
+        with tr.span("serve.sample", rows=1):
+            tok = self._sample_rows(logits, [req])[0]
         self._append_token(req, tok, slot)
 
     # -- shared-prefix cache hooks ----------------------------------------
     def _prefix_probe(self, req: Request) -> int:
         """Scheduler hook: cached-prefix length a new request would resume
         from (admission charges only the uncached tail)."""
-        return self.prefix.probe(req.prompt)
+        with self.tracer.span("serve.prefix_probe", rid=req.rid):
+            return self.prefix.probe(req.prompt)
 
     def _on_admit(self, slot: int, req: Request) -> None:
         """Scheduler hook, fired the moment a request claims a slot:
@@ -437,14 +502,16 @@ class ServeEngine:
         hit, page, entry = self.prefix.lookup(req.prompt)
         if hit <= 0:
             return
-        self._pins[req.rid] = entry
-        req.prefill_pos = hit
-        # Zero-copy alias: jax pages are immutable, so staging the cached
-        # page is safe — the tail chunk's cache update materializes the
-        # "copy" as fresh arrays.
-        self.kv.append(slot, page, hit, last=False)
-        self.stats["prefix_hits"] += 1
-        self.stats["prefix_hit_tokens"] += hit
+        with self.tracer.span("serve.prefix_hit", rid=req.rid, slot=slot,
+                              hit_tokens=hit):
+            self._pins[req.rid] = entry
+            req.prefill_pos = hit
+            # Zero-copy alias: jax pages are immutable, so staging the
+            # cached page is safe — the tail chunk's cache update
+            # materializes the "copy" as fresh arrays.
+            self.kv.append(slot, page, hit, last=False)
+        self._c["prefix_hits"].inc()
+        self._c["prefix_hit_tokens"].inc(hit)
 
     # -- chunked prefill ---------------------------------------------------
     def _chunk_fn(self, off: int):
@@ -471,25 +538,14 @@ class ServeEngine:
     def _run_chunk_rounds(self, by_slot: dict) -> None:
         """Ingest this step's chunk work-items, batching across slots.
 
-        Each slot's items are consecutive prompt ranges that must run in
-        order (chunk N+1 resumes chunk N's page), but items of *different*
-        slots are independent — so the step runs in rounds: every slot's
-        head item, with same-offset heads grouped into one multi-row
-        prefill call (``_run_chunk_group``).  Under a per-step budget most
-        slots carry exactly one chunk, so a round typically batches the
-        whole step's chunk work into one or two device calls."""
-        queues = {slot: list(items) for slot, items in by_slot.items()}
-        while queues:
-            heads: dict[int, list] = {}
-            for slot in sorted(queues):
-                w = queues[slot][0]
-                heads.setdefault(w.start, []).append((slot, w))
-            for off in sorted(heads):
-                self._run_chunk_group(off, heads[off])
-            for slot in list(queues):
-                queues[slot].pop(0)
-                if not queues[slot]:
-                    del queues[slot]
+        The round/grouping plan comes from ``scheduler.chunk_rounds`` —
+        the same function the replay simulator charges costs against, so
+        the simulated call pattern is the real one by construction.
+        Under a per-step budget most slots carry exactly one chunk, so a
+        round typically batches the whole step's chunk work into one or
+        two device calls (``_run_chunk_group``)."""
+        for off, group in chunk_rounds(by_slot):
+            self._run_chunk_group(off, group)
 
     def _run_chunk_group(self, off: int, group: list) -> None:
         """One multi-row prefill call for same-offset chunk work-items of
@@ -518,11 +574,16 @@ class ServeEngine:
         pages.extend([self._blank_page] * (gp - g))
         page_in = pages[0] if gp == 1 else self.kv.stack_pages(pages)
         self.chunk_offsets.add(off)
-        logits, page_out = self._chunk_fn(off)(
-            self.params, {"tokens": jnp.asarray(tokens)}, page_in,
-            jnp.asarray(li), jnp.asarray(valid))
-        self.stats["prefill_calls"] += 1
-        self.stats["prefill_chunks"] += g
+        tr = self.tracer
+        with tr.span("serve.prefill_chunk", offset=off, G=g, Gp=gp, C=c,
+                     tokens=gp * c):
+            logits, page_out = self._chunk_fn(off)(
+                self.params, {"tokens": jnp.asarray(tokens)}, page_in,
+                jnp.asarray(li), jnp.asarray(valid))
+            if self._trace_sync:
+                logits = jax.block_until_ready(logits)
+        self._c["prefill_calls"].inc()
+        self._c["prefill_chunks"].inc(g)
         out_pages = ([page_out] if gp == 1
                      else self.kv.split_pages(page_out, g))
         rows: list[Request | None] = [None] * gp
@@ -530,17 +591,19 @@ class ServeEngine:
         for i, (slot, w) in enumerate(group):
             req = w.req
             req.prefill_pos = w.start + w.length
-            self.stats["prefill_tokens"] += w.length
+            self._c["prefill_tokens"].inc(w.length)
             page = out_pages[i]
             done = not req.prefilling
             if done and self.ctx.mesh is not None:
                 # staged pages stayed on the prefill plan; each finished
                 # page reshards once, exactly like a whole-prompt page.
-                page = self.decode_ctx.reshard(page, self.kv.seq_defs)
-                self.stats["reshards"] += 1
-            self.kv.append(slot, page, req.prefill_pos, last=done)
+                with tr.span("serve.reshard", rid=req.rid, slot=slot):
+                    page = self.decode_ctx.reshard(page, self.kv.seq_defs)
+                self._c["reshards"].inc()
+            with tr.span("serve.kv_insert", slot=slot):
+                self.kv.append(slot, page, req.prefill_pos, last=done)
             if done:
-                self.stats["prefills"] += 1
+                self._c["prefills"].inc()
                 req.first_token_step = self.step_count
                 if self.prefix is not None:
                     entry = self._pins.pop(req.rid, None)
@@ -551,7 +614,8 @@ class ServeEngine:
                 rows[i] = req
                 done_rows.append((i, slot, req))
         if done_rows:
-            toks = self._sample_rows(logits, rows)
+            with tr.span("serve.sample", rows=len(done_rows)):
+                toks = self._sample_rows(logits, rows)
             for i, slot, req in done_rows:
                 self._append_token(req, toks[i], slot)
 
@@ -560,8 +624,15 @@ class ServeEngine:
         the per-step token budget), run it, then one fused decode over
         the fully-prefilled slots, sample, retire.  Returns the number of
         slots that were active in the decode."""
+        tr = self.tracer
+        with trace_lib.use(tr), tr.span("serve.step", step=self.step_count):
+            return self._step_body(tr)
+
+    def _step_body(self, tr) -> int:
         by_slot: dict[int, list] = {}
-        for w in self.sched.schedule_prefill(self.queue, self.step_count):
+        with tr.span("serve.schedule", queued=len(self.queue)):
+            work = self.sched.schedule_prefill(self.queue, self.step_count)
+        for w in work:
             if (not self._prefix_on and w.start == 0
                     and w.length == w.req.prompt_len):
                 self._start(w.slot, w.req)   # whole prompt: bucketed path
@@ -590,29 +661,39 @@ class ServeEngine:
             # routing so they stop consuming expert capacity (ROADMAP).
             if not self.sc.mask_dead_slots:
                 occ[:] = 1.0
-            logits, self.kv.cache, telem = self._decode(
-                self.params, jnp.asarray(toks), self.kv.cache,
-                jnp.asarray(pos), jnp.asarray(occ))
-            nxt = self._sample_rows(logits, rows)
+            with tr.span("serve.decode", active=len(active), slots=n):
+                logits, self.kv.cache, telem = self._decode(
+                    self.params, jnp.asarray(toks), self.kv.cache,
+                    jnp.asarray(pos), jnp.asarray(occ))
+                if self._trace_sync:
+                    logits = jax.block_until_ready(logits)
+            with tr.span("serve.sample", rows=len(active)):
+                nxt = self._sample_rows(logits, rows)
             self._record_telemetry(telem, len(active))
-            self.stats["decode_steps"] += 1
-            self.stats["slot_steps_active"] += len(active)
-            self.stats["slot_steps_total"] += n
+            self._c["decode_steps"].inc()
+            self._c["slot_steps_active"].inc(len(active))
+            self._c["slot_steps_total"].inc(n)
             for slot, req in active:
                 # the fed token's KV was just written at pos[slot]
                 self.kv.lengths[slot] = int(pos[slot]) + 1
                 self._append_token(req, nxt[slot], slot)
+        if tr.enabled:
+            tr.counter("serve.queue", depth=len(self.queue))
+            tr.counter("serve.slots", active=len(active))
         self.step_count += 1
         return len(active)
 
     def run(self, max_steps: int | None = None) -> None:
-        """Drive the step loop until every submitted request completes."""
+        """Drive the step loop until every submitted request completes;
+        with tracing on, the trace file is (re)written at the end."""
         steps = 0
         while self.queue or self.sched.active():
             self.step()
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
+        if self.tracer.enabled and self.tracer.path:
+            self.tracer.save()
 
     # -- telemetry --------------------------------------------------------
     def _record_telemetry(self, telem, n_active: int) -> None:
@@ -622,13 +703,30 @@ class ServeEngine:
                  "expert_load": np.asarray(telem["expert_load"]),
                  "overflow": np.asarray(telem["overflow"]),
                  "n_moe": float(telem["n_moe"])}
-        self.stats["overflow_total"] += float(entry["overflow"].sum())
-        self.telemetry.append(entry)
+        # Aggregate instruments cover the whole run in bounded memory;
+        # the raw entry lands in the keep_last_n ring for inspection.
+        self._c["overflow_total"].inc(float(entry["overflow"].sum()))
+        self._h_overflow.observe(float(entry["overflow"].sum()))
+        self._h_active.observe(n_active)
+        for e, load in enumerate(entry["expert_load"].tolist()):
+            self._c_expert_load.child(expert=e).inc(float(load))
+        self._telemetry.append(entry)
+
+    @property
+    def telemetry(self) -> list:
+        """Recent raw per-step MoE telemetry entries (bounded ring of the
+        last ``telemetry_keep_last_n`` decode steps, as a list)."""
+        return list(self._telemetry)
+
+    @property
+    def stats(self) -> dict:
+        """Legacy flat stats view over the typed metrics registry."""
+        return self.metrics.stats()
 
     @property
     def slot_utilization(self) -> float:
-        total = self.stats["slot_steps_total"]
-        return self.stats["slot_steps_active"] / total if total else 0.0
+        total = self._c["slot_steps_total"].value
+        return self._c["slot_steps_active"].value / total if total else 0.0
 
     # -- static-batch-compatible front door -------------------------------
     def generate(self, prompts: np.ndarray, max_new_tokens: int

@@ -83,6 +83,55 @@ class PrefillWork:
     length: int
 
 
+@dataclasses.dataclass(frozen=True)
+class StepDecision:
+    """Everything the scheduler decided in one ``schedule_prefill`` call —
+    the record the replay simulator must reproduce exactly (the fidelity
+    contract in docs/observability.md).  Comparable across a real
+    ``ServeEngine`` run and a cost-model replay because both drive the
+    *same* ``Scheduler``/``RequestQueue``/``PrefixCache`` classes.
+
+    ``admitted``: rids in admission order (slot claim order);
+    ``work``: the planned chunk items as ``(rid, slot, start, length)``;
+    ``prefix_hits``: ``(rid, hit_tokens)`` for admissions that resumed
+    from a cached prefix (``on_admit`` advanced ``prefill_pos``)."""
+    step: int
+    admitted: tuple
+    work: tuple
+    prefix_hits: tuple
+
+
+def chunk_rounds(by_slot: dict) -> list:
+    """Group per-slot ordered prefill work-items into execution rounds.
+
+    Each slot's items are consecutive prompt ranges that must run in
+    order (chunk N+1 resumes chunk N's page), but items of *different*
+    slots are independent — so execution proceeds in rounds of every
+    slot's head item, with same-offset heads grouped into one multi-row
+    batched prefill call.  Returns ``[(offset, [(slot, work), ...]),
+    ...]`` in execution order.
+
+    Shared by ``ServeEngine`` (which runs each group as one device call)
+    and the replay simulator (which charges each group one fitted
+    prefill-chunk cost) — the grouping IS the scheduling decision, so
+    both must compute it identically.
+    """
+    queues = {slot: list(items) for slot, items in by_slot.items()}
+    rounds: list = []
+    while queues:
+        heads: dict[int, list] = {}
+        for slot in sorted(queues):
+            w = queues[slot][0]
+            heads.setdefault(w.start, []).append((slot, w))
+        for off in sorted(heads):
+            rounds.append((off, heads[off]))
+        for slot in list(queues):
+            queues[slot].pop(0)
+            if not queues[slot]:
+                del queues[slot]
+    return rounds
+
+
 class RequestQueue:
     """FIFO queue with arrival times (for replaying staggered traffic)."""
 
@@ -162,6 +211,12 @@ class Scheduler:
         self.admitted = 0
         self.retired = 0
         self.max_concurrent = 0
+        # Optional decision capture: when a list is assigned here, every
+        # schedule_prefill call that admitted or planned anything appends
+        # a StepDecision — the fidelity contract the replay simulator is
+        # tested against (docs/observability.md).  None (default) keeps
+        # the hot path allocation-free.
+        self.decision_log: list[StepDecision] | None = None
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -238,6 +293,8 @@ class Scheduler:
         can_admit = queue is not None and not (
             self.policy == "static"
             and any(r is not None for r in self.slots))
+        admitted_rids: list[int] = []
+        prefix_hits: list[tuple[int, int]] = []
         if can_admit:
             fits = None
             if self.admission == "aware" and budget is not None:
@@ -254,15 +311,24 @@ class Scheduler:
                 req.admitted_step = step
                 self.slots[slot] = req
                 self.admitted += 1
+                admitted_rids.append(req.rid)
                 if self.on_admit is not None:
                     # Prefix-cache hook: may stage a cached page and
                     # advance req.prefill_pos past the hit, so the chunk
                     # plan below covers only the uncached tail.
                     self.on_admit(slot, req)
+                    if req.prefill_pos > 0:
+                        prefix_hits.append((req.rid, req.prefill_pos))
                 items, spent = self._emit_chunks(slot, req, planned,
                                                  spent, budget)
                 out.extend(items)
         self.max_concurrent = max(self.max_concurrent, len(self.active()))
+        if self.decision_log is not None and (out or admitted_rids):
+            self.decision_log.append(StepDecision(
+                step=step, admitted=tuple(admitted_rids),
+                work=tuple((w.req.rid, w.slot, w.start, w.length)
+                           for w in out),
+                prefix_hits=tuple(prefix_hits)))
         return out
 
     def admit(self, queue: RequestQueue, step: int

@@ -17,7 +17,12 @@
 * heartbeat file + step-time tracking: steps slower than
   ``straggler_factor`` × running median are logged as straggler events
   (the launcher's watchdog restarts/re-meshes on repeated events);
-* optional crash injection for the fault-tolerance tests.
+* optional crash injection for the fault-tolerance tests;
+* optional chrome-trace capture (``trace_path``): each step records a
+  ``train.step`` span (plus ``train.data``/``train.checkpoint`` around
+  input and save work) with the trainer's tracer installed as the
+  ambient one, so kernel-backend call-site spans from the first traced
+  step nest under it (docs/observability.md).
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as trace_lib
 from repro.optim import optimizers as opt_lib
 from repro.sharding import context as ctx_lib
 from repro.train.checkpoint import CheckpointManager
@@ -108,7 +114,7 @@ class Trainer:
                  jit: bool = True, crash_at_step: int | None = None,
                  ctx: ctx_lib.MeshContext | None = None,
                  kernel_backend: str | None = None,
-                 router=None):
+                 router=None, trace_path: str | None = None):
         # The sharding context is entered around step tracing so loss
         # closures that consult current_ctx() (instead of binding ctx
         # explicitly) still resolve the right mesh/plan.
@@ -146,6 +152,10 @@ class Trainer:
             else step_fn
         self.start_step = 0
         self.crash_at_step = crash_at_step
+        # Chrome-trace capture (docs/observability.md): None => the shared
+        # null tracer (each span site costs one no-op context manager).
+        self.tracer = (trace_lib.Tracer(trace_path, process_name="train")
+                       if trace_path else trace_lib.NULL)
         self.metrics_log: list[dict] = []
         self._durations: list[float] = []
         self.straggler_events: list[dict] = []
@@ -187,13 +197,18 @@ class Trainer:
                 # complete one either way).
                 self.ckpt.wait()
                 raise RuntimeError(f"injected crash at step {step}")
-            batch = next(self.data_iter)
+            tr = self.tracer
+            with tr.span("train.data", step=step):
+                batch = next(self.data_iter)
             t0 = time.perf_counter()
-            with (self.ctx if self.ctx is not None
-                  else ctx_lib.MeshContext.null()):
+            with trace_lib.use(tr), \
+                    tr.span("train.step", step=step,
+                            microbatches=self.loop.microbatches), \
+                    (self.ctx if self.ctx is not None
+                     else ctx_lib.MeshContext.null()):
                 self.state, metrics = self.step_fn(
                     self.state, batch, jax.random.fold_in(rng, step))
-            jax.block_until_ready(metrics["loss"])
+                jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self._heartbeat(step)
             self._check_straggler(step, dt)
@@ -207,11 +222,14 @@ class Trainer:
                       f"loss={last_metrics.get('loss', float('nan')):.4f} "
                       f"({dt:.3f}s)")
             if (step + 1) % self.loop.checkpoint_every == 0:
-                self.ckpt.save_async(step + 1, self.state,
-                                     {"data": self.data_iter.state()})
+                with self.tracer.span("train.checkpoint", step=step + 1):
+                    self.ckpt.save_async(step + 1, self.state,
+                                         {"data": self.data_iter.state()})
         self.ckpt.wait()
         self.ckpt.save(self.loop.total_steps, self.state,
                        {"data": self.data_iter.state()})
+        if self.tracer.enabled and self.tracer.path:
+            self.tracer.save()
         with open(os.path.join(self.workdir, "metrics.jsonl"), "a") as f:
             for m in self.metrics_log:
                 f.write(json.dumps(m) + "\n")
