@@ -5,8 +5,9 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test-tier1 test-slow test-all test-kernels test-serve \
-	test-routing test-obs bench-micro bench-serve bench-serve-prefix \
-	bench-replay trace-serve fit-costs replay tune-kernels
+	test-routing test-moa test-obs bench-micro bench-serve \
+	bench-serve-prefix bench-replay trace-serve fit-costs replay \
+	tune-kernels
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:
@@ -39,6 +40,13 @@ test-serve:
 test-routing:
 	$(PY) -m pytest -q tests/test_router.py tests/test_gating.py \
 		tests/test_moe.py
+
+# Mixture-of-Attention-Heads suite (part of tier-1): dense-oracle layer
+# math, ref-vs-pallas values + grads (1- and 8-device), decode/chunked-
+# prefill consistency, continuous-batching bit-identity, loud config
+# fallbacks (docs/moa.md).
+test-moa:
+	$(PY) -m pytest -q tests/test_moa.py
 
 # Observability suite (part of tier-1): chrome-trace span schema +
 # traced/untraced bit-identity, typed metrics instruments, and the

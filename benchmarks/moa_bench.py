@@ -1,0 +1,206 @@
+"""MoA benchmarks: routed attention-head groups vs dense-all-heads.
+
+The claim to pin PR-over-PR (docs/moa.md): per token the routed layer
+runs only ``k`` of ``E`` head groups through the Q/O projections and the
+score/value contractions — ``k/E`` of the dense attention-head FLOPs —
+while producing the *same output* as a dense execution of every head
+group weighted by the same gates (the layer equation is linear in the
+per-group outputs, so sparse execution is exact, not approximate; any
+difference is fp accumulation order).  Rows:
+
+  moa_dense_all_heads[_decode]  every head group computed, gate-weighted
+  moa_routed[_decode]           dispatch→gmm→combine sparse execution;
+                                derived carries head_gflop, the k/E flop
+                                fraction, and max|routed − dense|
+
+Wall times are CPU-host numbers (best-of-N per the ROADMAP discipline);
+the ``head_gflop`` field is the host-independent comparison.  The
+``serve_moa`` row (via ``benchmarks/serve_bench.py`` →
+``BENCH_serve.json``) runs an MoA+MoE LM (reduced ``moa-demo``) under
+continuous batching and reports tok/s plus the per-step ``moa_*``
+telemetry family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.common import param as pm
+from repro.core import moa
+from repro.kernels import backend as backend_lib
+from repro.models import attention as attn_lib
+
+B, S, D, E, K, HG, HD = 2, 128, 128, 8, 2, 2, 16
+
+
+def _dense_weights(dec, n_tokens: int, n_experts: int):
+    """Token-major dense gate matrix [T, E] from the (possibly capacity-
+    truncated) plan — zero for unselected/dropped assignments."""
+    w = jnp.zeros((n_tokens, n_experts))
+    return w.at[jnp.arange(n_tokens)[:, None],
+                dec.plan.expert_index].add(dec.plan.weight)
+
+
+def _dense_apply(params, x, a: moa.MoAArgs, positions):
+    """Dense-all-heads oracle: every head group computes for every token
+    (same flash path, E·Hg virtual heads), gate-weighted at the end."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    bk = backend_lib.resolve(a)
+    dec = moa._route(params, flat, a, bk, train=False, rng=None, mask=None)
+    w = _dense_weights(dec, b * s, a.n_experts)
+    hg, hd, e = a.n_heads_per_expert, a.head_dim, a.n_experts
+    q = jnp.einsum("td,edh->teh", flat, params["wq"].astype(x.dtype))
+    q = q.reshape(b, s, e * hg, hd)
+    q = moa._norm_rope_q(params, q, positions, a)
+    q = moa._to_virtual(q.reshape(b, s, e, hg, hd), a.n_kv_heads)
+    k, v = moa._shared_kv(params, x, positions, a)
+    kv = a.n_kv_heads
+    g = q.shape[2] // kv
+    qr = jnp.moveaxis(q.reshape(b, s, kv, g, hd), 1, 3)
+    o = attn_lib.flash_attention(
+        qr, jnp.moveaxis(k, 1, 3), jnp.moveaxis(v, 1, 2), True, 0,
+        moa._block(a.q_block, s), moa._block(a.kv_block, s))
+    o = o.reshape(b, kv * g, s, hd).transpose(0, 2, 1, 3)
+    o = moa._from_virtual(o, kv, e, hg)                 # [B, S, E, Hg, hd]
+    oe = jnp.einsum("tEh,Ehd->tEd", o.reshape(b * s, e, hg * hd),
+                    params["wo"].astype(x.dtype))
+    return jnp.einsum("tEd,tE->td", oe, w).reshape(b, s, d)
+
+
+def _dense_decode(params, x, cache, cur_index, a: moa.MoAArgs):
+    """Dense-all-heads single-token decode oracle (mirrors moa_decode's
+    one-hot cache blend and masked softmax, over all E·Hg heads)."""
+    b = x.shape[0]
+    cur = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32).reshape(-1),
+                           (b,))
+    positions = cur[:, None]
+    bk = backend_lib.resolve(a)
+    flat = x.reshape(b, x.shape[-1])
+    dec = moa._route(params, flat, a, bk, train=False, rng=None, mask=None)
+    w = _dense_weights(dec, b, a.n_experts)
+    hg, hd, e = a.n_heads_per_expert, a.head_dim, a.n_experts
+    q = jnp.einsum("td,edh->teh", flat, params["wq"].astype(x.dtype))
+    q = q.reshape(b, 1, e * hg, hd)
+    q = moa._norm_rope_q(params, q, positions, a)
+    q = moa._to_virtual(q.reshape(b, 1, e, hg, hd), a.n_kv_heads)
+    k_new, v_new = moa._shared_kv(params, x, positions, a)
+    length = cache["k"].shape[1]
+    hit = (jnp.arange(length)[None, :] == cur[:, None])[..., None, None]
+    k = jnp.where(hit, k_new.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
+    kv = a.n_kv_heads
+    g = q.shape[2] // kv
+    qr = q.reshape(b, 1, kv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    valid = jnp.arange(length)[None, :] <= cur[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, attn_lib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, kv * g, hd).astype(x.dtype)
+    o = moa._from_virtual(o, kv, e, hg)                 # [B, 1, E, Hg, hd]
+    oe = jnp.einsum("bEh,Ehd->bEd", o.reshape(b, e, hg * hd),
+                    params["wo"].astype(x.dtype))
+    return jnp.einsum("bEd,bE->bd", oe, w).reshape(b, 1, -1)
+
+
+def _head_gflop(heads: int, seq_ctx: int, n_tokens: int) -> float:
+    """Head FLOPs for ``n_tokens`` query tokens against ``seq_ctx`` keys:
+    Q + O projections (2 matmuls) plus score/value contractions."""
+    qo = 2 * 2 * n_tokens * D * heads * HD
+    attn = 4 * n_tokens * seq_ctx * heads * HD
+    return (qo + attn) / 1e9
+
+
+def run_micro() -> None:
+    a = moa.MoAArgs(n_experts=E, k=K, d_model=D, n_heads_per_expert=HG,
+                    head_dim=HD, n_kv_heads=1, dtype=jnp.float32,
+                    capacity_factor=2.0, q_block=64, kv_block=64,
+                    kernel_backend="ref")
+    params = pm.materialize(moa.moa_defs(a), jax.random.PRNGKey(0))
+    params["gate"]["wg"] = 0.5 * jax.random.normal(jax.random.PRNGKey(1),
+                                                   (D, E))
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    # --- full-sequence forward: routed vs dense-all-heads ---------------
+    routed = jax.jit(lambda p, x: moa.moa_apply(p, x, a, positions=pos,
+                                                train=False)[0])
+    dense = jax.jit(lambda p, x: _dense_apply(p, x, a, pos))
+    diff = float(jnp.abs(routed(params, x) - dense(params, x)).max())
+    gd = _head_gflop(E * HG, S // 2, B * S)     # causal: ~S/2 mean context
+    gr = _head_gflop(K * HG, S // 2, B * S)
+    us = time_call(dense, params, x, reduce="best")
+    emit("moa_dense_all_heads", us,
+         f"B={B} S={S} E={E} heads={E * HG};head_gflop={gd:.3f}")
+    us = time_call(routed, params, x, reduce="best")
+    emit("moa_routed", us,
+         f"B={B} S={S} k={K} heads={K * HG};head_gflop={gr:.3f};"
+         f"flop_frac={K / E:.3f};max_diff={diff:.1e};"
+         f"allclose={diff < 1e-4}")
+
+    # --- single-token decode against an S-token cache -------------------
+    cache = pm.materialize(moa.init_cache_defs(B, S + 8, a),
+                           jax.random.PRNGKey(3))
+    _, cache = moa.moa_prefill(params, x, pos, a, cache=cache)
+    xt = jax.random.normal(jax.random.PRNGKey(4), (B, 1, D))
+    cur = jnp.full((B,), S, jnp.int32)
+    routed_d = jax.jit(lambda p, x, c: moa.moa_decode(p, x, c, cur, a)[0])
+    dense_d = jax.jit(lambda p, x, c: _dense_decode(p, x, c, cur, a))
+    diff = float(jnp.abs(routed_d(params, xt, cache)
+                         - dense_d(params, xt, cache)).max())
+    gd = _head_gflop(E * HG, S + 1, B)
+    gr = _head_gflop(K * HG, S + 1, B)
+    us = time_call(dense_d, params, xt, cache, reduce="best")
+    emit("moa_dense_all_heads_decode", us,
+         f"B={B} ctx={S + 1} E={E} heads={E * HG};head_gflop={gd:.4f}")
+    us = time_call(routed_d, params, xt, cache, reduce="best")
+    emit("moa_routed_decode", us,
+         f"B={B} ctx={S + 1} k={K} heads={K * HG};head_gflop={gr:.4f};"
+         f"flop_frac={K / E:.3f};max_diff={diff:.1e};"
+         f"allclose={diff < 1e-4}")
+
+
+def run_serve() -> None:
+    """``serve_moa``: an MoA+MoE LM (reduced moa-demo) under continuous
+    batching — the second sparse hot path the engine keeps full.  Emits
+    tok/s plus the per-step ``moa_*`` telemetry aggregates."""
+    from benchmarks.serve_bench import _best_of
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("moa-demo").replace(
+        d_model=64, vocab_size=256, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=96, n_experts=4, moe_k=2, moe_d_ff=32,
+        moa_experts=4, moa_k=2, moa_heads_per_expert=2,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        q_block=16, kv_block=16)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    trace = [(rng.randint(1, cfg.vocab_size,
+                          ((8, 16, 8, 32)[i % 4],)).astype(np.int32),
+              (8, 4, 12, 8)[i % 4], i // 2) for i in range(12)]
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=4))
+    r = _best_of(eng, trace)
+    emit("serve_moa", r["wall_s"] * 1e6,
+         f"tok_s={r['tok_s']:.1f};steps={r['decode_steps']};"
+         f"util={r['util']:.2f};step_p95_ms={r['step_p95_ms']:.1f};"
+         f"moa_overflow={eng.stats['moa_overflow_total']:.0f};"
+         f"moe_overflow={eng.stats['overflow_total']:.0f}")
+
+
+def run() -> None:
+    run_micro()
+    run_serve()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, ".")
+    print("name,us_per_call,derived")
+    run()

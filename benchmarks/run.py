@@ -10,6 +10,9 @@ accumulates across PRs.  Mapping to the paper:
   table6_balance    -> Table 6: w_importance/w_load ablation (CV + max/mean)
   fig2_capacity     -> Figure 2-left: perplexity vs capacity, matched ops
   microbench        -> host-side hot-path microbenchmarks
+  moa_bench         -> routed vs dense-all-heads attention (beyond-paper;
+                       docs/moa.md) — micro rows join the micro suite,
+                       the serve_moa row joins the serve suite
   serve_bench       -> static-batch vs continuous-batching serving
                        throughput/latency (beyond-paper; docs/serving.md)
   (Figure 3 is Figure 2 at 100B words; Table 5 needs the 12-pair corpus —
@@ -47,12 +50,13 @@ def main() -> None:
                      else "BENCH_full.json")
 
     print("name,us_per_call,derived")
-    from benchmarks import (common, fig2_capacity, microbench, serve_bench,
-                            table2_mt_ops, table6_balance, table7_ops)
+    from benchmarks import (common, fig2_capacity, microbench, moa_bench,
+                            serve_bench, table2_mt_ops, table6_balance,
+                            table7_ops)
     runners = {
         "table7": table7_ops.run,
         "table2": table2_mt_ops.run,
-        "micro": microbench.run,
+        "micro": lambda: (microbench.run(), moa_bench.run_micro()),
         "table6": table6_balance.run,
         "fig2": fig2_capacity.run,
         "serve": serve_bench.run,

@@ -273,6 +273,10 @@ def run() -> None:
     # --- shared-prefix radix KV cache ------------------------------------
     run_prefix(cfg, params)
 
+    # --- MoA under continuous batching (serve_moa; docs/moa.md) ----------
+    from benchmarks import moa_bench
+    moa_bench.run_serve()
+
 
 if __name__ == "__main__":
     import json

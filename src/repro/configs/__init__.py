@@ -6,6 +6,7 @@ from repro.configs import (  # noqa: F401
     jamba_v01_52b,
     kimi_k2_1t_a32b,
     llama3_8b,
+    moa_demo,
     moe_paper,
     musicgen_large,
     pixtral_12b,

@@ -17,7 +17,7 @@ from repro.core.router import DEFAULT_CAPACITY_FACTOR, RouterSpec
 
 @dataclasses.dataclass(frozen=True)
 class LayerKind:
-    mixer: str = "attn"        # attn | attn_local | mamba
+    mixer: str = "attn"        # attn | attn_local | mamba | moa
     ffn: str = "dense"         # dense | moe | moe+dense | none
 
 
@@ -58,6 +58,17 @@ class ModelConfig:
     w_load: float = 0.1
     gating_mode: str = "noisy_topk"
     moe_wide_dispatch: bool = True         # §3.1 combined-batch resharding
+    # --- MoA (Mixture-of-Attention-Heads; core/moa.py, docs/moa.md) ---------
+    # Positions-in-period whose *mixer* is a routed head-group layer:
+    # n_experts groups of moa_heads_per_expert query heads, k per token,
+    # shared K/V (n_kv_heads, MQA-style — the KV cache is a plain
+    # attention cache).  Routing defaults to the FFN RouterSpec path;
+    # moa_router overrides it independently of the FFN router.
+    moa_positions: tuple[int, ...] = ()
+    moa_experts: int = 0
+    moa_k: int = 0
+    moa_heads_per_expert: int = 0
+    moa_router: RouterSpec | None = None
     # --- attention ----------------------------------------------------------
     qk_norm: bool = False
     rope_theta: float = 10000.0
@@ -128,6 +139,29 @@ def layer_kinds(cfg: ModelConfig) -> list[LayerKind]:
             mixer = "attn" if p in cfg.global_attn_positions else "attn_local"
         else:
             mixer = "attn"
+        if p in cfg.moa_positions:
+            # Loud fallback for unsupported combos (docs/moa.md): MoA is
+            # an attention mixer — it cannot replace an ssm state scan,
+            # and it has no sliding-window variant.
+            if mixer == "mamba":
+                raise ValueError(
+                    f"moa_positions={cfg.moa_positions}: position {p} is "
+                    f"an ssm mixer in family {cfg.family!r}; MoA routes "
+                    "attention head groups and cannot replace a state-"
+                    "space scan (put MoA on an attn position)")
+            if mixer == "attn_local":
+                raise ValueError(
+                    f"moa_positions={cfg.moa_positions}: position {p} is "
+                    "a sliding-window local-attention layer; MoA has no "
+                    "windowed variant (use a global_attn_positions slot)")
+            if cfg.moa_experts < 2 or cfg.moa_k < 1 \
+                    or cfg.moa_heads_per_expert < 1:
+                raise ValueError(
+                    "moa_positions set but moa_experts/moa_k/"
+                    "moa_heads_per_expert are not configured "
+                    f"(got {cfg.moa_experts}/{cfg.moa_k}/"
+                    f"{cfg.moa_heads_per_expert})")
+            mixer = "moa"
         if cfg.family == "ssm":
             ffn = "none"                     # pure mamba blocks have no FFN
         elif p in cfg.moe_positions:
@@ -193,6 +227,13 @@ def count_params(cfg: ModelConfig) -> dict:
             c = d * cfg.head_dim * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
             c_total += c
             c_active += c
+        elif kind.mixer == "moa":
+            hg = cfg.moa_heads_per_expert * cfg.head_dim
+            per_e = 2 * d * hg                      # wq + wo per head group
+            shared = 2 * d * max(cfg.n_kv_heads, 1) * cfg.head_dim + \
+                d * cfg.moa_experts                 # wk/wv + gate
+            c_total += cfg.moa_experts * per_e + shared
+            c_active += cfg.moa_k * per_e + shared
         elif kind.mixer == "mamba":
             d_in = cfg.ssm_expand * d
             r = -(-d // 16)

@@ -37,7 +37,7 @@ from repro.kernels import backend as backend_lib
 from repro.sharding import context as ctx_lib
 
 
-def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
+def _local_moe(params, x_local, mask_local, a: MoEArgs, *, train, rng,
                ep_axis: str, fsdp_axis: str | None, ep: int,
                bk: backend_lib.KernelBackend,
                router: router_lib.Router,
@@ -61,7 +61,8 @@ def _local_moe(params, x_local, a: MoEArgs, *, train, rng,
         if fsdp_axis is not None:
             rng = jax.random.fold_in(rng, jax.lax.axis_index(fsdp_axis))
 
-    dec = router.route(params, x_local, train=train, rng=rng)
+    dec = router.route(params, x_local, train=train, rng=rng,
+                       mask=mask_local)
     info, p = dec, dec.plan
     capacity = p.capacity
     # Local tokens scatter into a *global*-E buffer before the exchange —
@@ -135,11 +136,16 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
                  train: bool = True, rng: jax.Array | None = None,
                  ep_axis: str = "model",
                  dp_axes: tuple[str, ...] = ("data",),
+                 mask: jax.Array | None = None,
                  ctx: ctx_lib.MeshContext | None = None):
     """Expert-parallel MoE over a flat token batch x: [T, d_model].
 
     Tokens shard over (dp_axes..., ep_axis); expert weights shard as
     [experts -> ep_axis, d_model -> dp_axes[-1] (FSDP)]; gates replicated.
+    ``mask`` ([T] in {0,1}, sharded like the tokens) is the router's
+    token-validity mask: masked tokens (dead serving slots, padding)
+    route nowhere, consume no capacity, and drop out of the globally
+    psum'd importance/load balance statistics.
     The mesh comes from ``ctx`` when given (explicit-first), else the
     positional ``mesh`` argument.  NOTE: only ``ctx.mesh`` is consumed —
     this schedule's sharding is fixed by ``ep_axis``/``dp_axes``, not by
@@ -181,5 +187,11 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
                            ep_axis=ep_axis, fsdp_axis=fsdp_axis,
                            ep=mesh.shape[ep_axis], bk=bk, router=router,
                            body_ctx=body_ctx)
-    return ctx_lib.shard_map(fn, mesh, (w_specs, token_spec),
-                             (token_spec, aux_spec))(params, x)
+    if mask is None:
+        return ctx_lib.shard_map(
+            lambda p, t: fn(p, t, None), mesh, (w_specs, token_spec),
+            (token_spec, aux_spec))(params, x)
+    mask_spec = P(tuple(dp_axes) + (ep_axis,))
+    return ctx_lib.shard_map(fn, mesh,
+                             (w_specs, token_spec, mask_spec),
+                             (token_spec, aux_spec))(params, x, mask)

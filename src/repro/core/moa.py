@@ -1,0 +1,398 @@
+"""Mixture-of-Attention-Heads: per-token routed attention head groups.
+
+MoA (Zhang et al. 2022, PAPERS.md) applies the paper's conditional-
+computation thesis to the *mixer*: the experts are groups of attention
+heads, and each token runs only its top-k head groups instead of all of
+them.  This module is the first non-FFN consumer of the Router API
+(``core/router.py``) — proof that RouteDecision/DispatchPlan are
+expert-agnostic (ROADMAP open item 4):
+
+* **Shared K/V** (MoA keeps one K/V projection for every head group, the
+  MQA-style factorization that makes the sparsity pay): the KV cache has
+  the exact shape of a plain attention layer
+  (``attention.init_cache_defs``), so ``SlotKVCache`` pages, chunked
+  prefill, and the shared-prefix radix cache work unchanged.
+* **Routed Q/O**: each expert owns a ``[d, Hg·hd]`` query projection and
+  a ``[Hg·hd, d]`` output projection.  A token's winning experts are
+  chosen by any registered routing policy (noisy_topk, expert_choice,
+  batchwise, threshold) and the projections run as grouped matmuls over
+  capacity buffers — the same ``dispatch → gmm → combine`` hot path the
+  MoE FFN uses, through the same kernel backend registry
+  (``repro.kernels.backend``, custom VJPs intact on ``ref`` and
+  ``pallas``).
+
+Layer math (one token t, selected experts e with gates w_e):
+
+    y_t = sum_e  w_e · Attn(x_t W_q^e, K, V) W_o^e
+
+where K/V are shared across experts.  Because W_o is linear and the
+combine is linear, the gate weighting is applied once, at the final
+combine.  The attention itself runs in token-major layout over the k·Hg
+*selected* virtual heads — k/E of the dense-all-heads FLOPs for the
+score/value contractions and the Q/O projections.
+
+Data movement uses the backend kernels twice per direction:
+
+1. Q: ``dispatch(x)`` → ``gmm(wq)`` → assignment-major ``combine``
+   (unit weights) gathers each token's k projected head groups back to
+   token-major for attention;
+2. O: assignment-major ``dispatch`` scatters the per-assignment
+   attention outputs to the buffers → ``gmm(wo)`` → weighted ``combine``.
+
+The assignment-major view reshapes the token-major [T, k] plan to
+[T·k, 1] — every (token, slot) assignment is its own row, which is
+exactly what the fused kernels already support (k is just an array dim).
+
+Capacity/overflow semantics match the MoE layer: an assignment beyond
+expert capacity is dropped — its gate weight is zeroed, so that head
+group contributes nothing and the token leans on its other winners (or
+the residual, if all k drop).  Masked tokens (dead serving slots,
+bucketed-prefill padding) route nowhere and consume no capacity.
+
+See docs/moa.md for the serving invariants and the bench methodology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.core import dispatch as dsp
+from repro.core import router as router_lib
+from repro.kernels import backend as backend_lib
+from repro.models import attention as attn_lib
+from repro.models import layers
+from repro.sharding import context as ctx_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class MoAArgs:
+    """Configuration of one Mixture-of-Attention-Heads layer.
+
+    ``n_experts`` head groups of ``n_heads_per_expert`` query heads each;
+    ``k`` groups run per token.  ``n_kv_heads`` shared K/V heads must
+    divide ``n_heads_per_expert`` (each group spreads its heads uniformly
+    over the shared K/V heads; MoA's paper setting is 1 — pure MQA).
+    Routing/kernel knobs mirror ``MoEArgs`` so ``router.build`` and
+    ``backend.resolve`` treat both carriers identically.
+    """
+    n_experts: int
+    k: int
+    d_model: int
+    n_heads_per_expert: int
+    head_dim: int
+    n_kv_heads: int = 1
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # --- routing (docs/routing.md; resolve_spec inherits k) ---------------
+    router: "router_lib.RouterSpec | None" = None
+    capacity_factor: float | None = None
+    eval_capacity_factor: float | None = None
+    w_importance: float = 0.1
+    w_load: float = 0.1
+    priority_dispatch: bool = False
+    # --- kernels (docs/kernels.md) ----------------------------------------
+    kernel_backend: str | None = None
+    dispatch_impl: str = "sort"
+    dispatch_vmem_limit: int | None = None
+    dispatch_e_block: int | None = None
+    gmm_autotune: bool = True
+    # --- attention blocking -----------------------------------------------
+    q_block: int = 512
+    kv_block: int = 512
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if self.n_experts < 2:
+            raise ValueError(
+                f"MoA needs >= 2 head-group experts, got {self.n_experts}")
+        if not 1 <= self.k <= self.n_experts:
+            raise ValueError(
+                f"MoA k={self.k} out of range for E={self.n_experts}")
+        if self.n_kv_heads < 1 \
+                or self.n_heads_per_expert % self.n_kv_heads:
+            raise ValueError(
+                f"n_heads_per_expert={self.n_heads_per_expert} must be a "
+                f"positive multiple of n_kv_heads={self.n_kv_heads} (each "
+                "head group spreads uniformly over the shared K/V heads)")
+
+    @property
+    def d_head_group(self) -> int:
+        return self.n_heads_per_expert * self.head_dim
+
+
+def moa_defs(a: MoAArgs) -> dict:
+    """Parameter definitions: router gate + per-expert wq/wo (sharded like
+    MoE expert weights: experts over the model axis, d_model FSDP) +
+    shared wk/wv (plain attention axes — one K/V projection, MQA-style)."""
+    spec = router_lib.resolve_spec(a)
+    defs = dict(router_lib.Router(spec, a.n_experts).gate_defs(a.d_model))
+    hh = a.d_head_group
+    defs.update({
+        "wq": ParamDef((a.n_experts, a.d_model, hh),
+                       ("experts", "expert_embed", "expert_mlp"),
+                       dtype=a.dtype, fan_in=a.d_model),
+        "wo": ParamDef((a.n_experts, hh, a.d_model),
+                       ("experts", "expert_mlp", "expert_embed"),
+                       dtype=a.dtype, fan_in=hh),
+        "wk": ParamDef((a.d_model, a.n_kv_heads, a.head_dim),
+                       ("embed_fsdp", "kv_heads", "head_dim"),
+                       dtype=a.dtype, fan_in=a.d_model),
+        "wv": ParamDef((a.d_model, a.n_kv_heads, a.head_dim),
+                       ("embed_fsdp", "kv_heads", "head_dim"),
+                       dtype=a.dtype, fan_in=a.d_model),
+    })
+    if a.qk_norm:
+        defs["q_norm"] = layers.rmsnorm_defs(a.head_dim)
+        defs["k_norm"] = layers.rmsnorm_defs(a.head_dim)
+    return defs
+
+
+def init_cache_defs(batch: int, max_len: int, a: MoAArgs, *, dtype=None):
+    """KV-cache defs — identical to a plain attention layer's (the shared
+    K/V projection is the whole point: pages/prefix-cache reuse)."""
+    return attn_lib.init_cache_defs(batch, max_len, a.n_kv_heads,
+                                    a.head_dim, window=0,
+                                    dtype=dtype or a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# plan views + projection pipeline
+# ---------------------------------------------------------------------------
+
+def assignment_plan(p: dsp.DispatchPlan) -> dsp.DispatchPlan:
+    """Token-major [T, k] plan -> assignment-major [T·k, 1] view.
+
+    Every (token, slot) assignment becomes its own row with unit weight
+    (zero where the assignment was dropped or masked), so the backend's
+    ``combine`` acts as a pure gather of per-assignment rows and its
+    ``dispatch`` as a pure per-assignment scatter — the fused kernels run
+    unchanged (k is just an array dimension to them)."""
+    tk = p.expert_index.size
+    unit = (p.weight > 0.0).astype(jnp.float32)
+    return dsp.DispatchPlan(
+        expert_index=p.expert_index.reshape(tk, 1),
+        position=p.position.reshape(tk, 1),
+        weight=unit.reshape(tk, 1),
+        n_experts=p.n_experts, capacity=p.capacity,
+        fraction_dropped=p.fraction_dropped)
+
+
+def _routed_q(params, flat, dec, a: MoAArgs, bk, ctx):
+    """[T, d] tokens -> [T·k, Hg·hd] selected head-group queries."""
+    buf = bk.dispatch(flat, dec, a, ctx=ctx)               # [E, C, d]
+    buf = ctx_lib.with_constraint(
+        buf, ("experts", "expert_capacity", "embed"), ctx)
+    qbuf = bk.gmm(buf, params["wq"], a, ctx=ctx)           # [E, C, Hg·hd]
+    ap = assignment_plan(dec.plan)
+    return bk.combine(qbuf, ap, a, dtype=flat.dtype, ctx=ctx)
+
+
+def _routed_o(params, o_sel, dec, a: MoAArgs, bk, ctx, dtype):
+    """[T·k, Hg·hd] attention outputs -> [T, d] gate-weighted output."""
+    ap = assignment_plan(dec.plan)
+    obuf = bk.dispatch(o_sel, ap, a, ctx=ctx)              # [E, C, Hg·hd]
+    out = bk.gmm(obuf, params["wo"], a, ctx=ctx)           # [E, C, d]
+    out = ctx_lib.with_constraint(
+        out, ("experts", "expert_capacity", "embed"), ctx)
+    return bk.combine(out, dec, a, dtype=dtype, ctx=ctx)
+
+
+def _norm_rope_q(params, q_sel, positions, a: MoAArgs):
+    """q_sel: [B, S, kk·Hg, hd] — per-head qk-norm then RoPE."""
+    if a.qk_norm:
+        q_sel = layers.rmsnorm(params["q_norm"], q_sel)
+    return layers.rope(q_sel, positions, a.rope_theta)
+
+
+def _shared_kv(params, x, positions, a: MoAArgs):
+    """Shared K/V projection (+norm +rope): [B, S, d] -> 2x [B, S, KV, hd]."""
+    dt = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+    if a.qk_norm:
+        k = layers.rmsnorm(params["k_norm"], k)
+    k = layers.rope(k, positions, a.rope_theta)
+    return k, v
+
+
+def _to_virtual(q_sel, n_kv: int):
+    """[B, S, kk, Hg, hd] -> KV-major [B, S, kk·Hg, hd] virtual heads.
+
+    ``blockwise/flash_attention`` map query head h to KV head h // g, so
+    the virtual head axis must be KV-major: within each KV head sit the
+    kk·(Hg/KV) selected per-group heads."""
+    b, s, kk, hg, hd = q_sel.shape
+    ge = hg // n_kv
+    q = q_sel.reshape(b, s, kk, n_kv, ge, hd).transpose(0, 1, 3, 2, 4, 5)
+    return q.reshape(b, s, n_kv * kk * ge, hd)
+
+
+def _from_virtual(o, n_kv: int, kk: int, hg: int):
+    """Inverse of :func:`_to_virtual`: [B, S, kk·Hg, hd] -> [B,S,kk,Hg,hd]."""
+    b, s, h, hd = o.shape
+    ge = hg // n_kv
+    o = o.reshape(b, s, n_kv, kk, ge, hd).transpose(0, 1, 3, 2, 4, 5)
+    return o.reshape(b, s, kk, hg, hd)
+
+
+def _block(pref: int, n: int) -> int:
+    """Largest usable block size: ``flash_attention`` silently truncates
+    sequences that don't divide the block, so fall back to the full
+    length (one block) when ``pref`` doesn't divide ``n``."""
+    b = min(pref, n)
+    return b if n % b == 0 else n
+
+
+def _route(params, flat, a: MoAArgs, bk, *, train, rng, mask):
+    router = router_lib.build(a, topk_impl=bk.topk_impl)
+    return router.route(params, flat, train=train, rng=rng, mask=mask)
+
+
+def _aux(dec: router_lib.RouteDecision) -> dict:
+    return {"aux_loss": dec.aux_loss, "metrics": dec.metrics,
+            "telemetry": dec.telemetry}
+
+
+# ---------------------------------------------------------------------------
+# train/prefill/decode entry points
+# ---------------------------------------------------------------------------
+
+def moa_apply(params, x, a: MoAArgs, *, positions, train: bool = True,
+              rng: jax.Array | None = None,
+              ctx: ctx_lib.MeshContext | None = None,
+              mask: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """Full-sequence MoA (train / whole-prompt forward).
+
+    x: [B, S, d]; positions: [B, S].  ``mask`` ([B·S] or broadcastable)
+    marks valid tokens for routing.  Returns (y [B, S, d], aux) with the
+    same aux contract as ``moe_apply`` (aux_loss / metrics / telemetry).
+    """
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    bk = backend_lib.resolve(a)
+    dec = _route(params, flat, a, bk, train=train, rng=rng, mask=mask)
+    kk = dec.plan.expert_index.shape[1]
+
+    q_sel = _routed_q(params, flat, dec, a, bk, ctx)       # [T·k, Hg·hd]
+    q_sel = q_sel.reshape(b, s, kk * a.n_heads_per_expert, a.head_dim)
+    q = _norm_rope_q(params, q_sel, positions, a)
+    q = _to_virtual(q.reshape(b, s, kk, a.n_heads_per_expert, a.head_dim),
+                    a.n_kv_heads)
+    k, v = _shared_kv(params, x, positions, a)
+
+    q_block = _block(a.q_block, s)
+    kv_block = _block(a.kv_block, s)
+    kv_heads = a.n_kv_heads
+    g = q.shape[2] // kv_heads
+    qr = jnp.moveaxis(q.reshape(b, s, kv_heads, g, a.head_dim), 1, 3)
+    kr = jnp.moveaxis(k, 1, 3)
+    vr = jnp.moveaxis(v, 1, 2)
+    o = attn_lib.flash_attention(qr, kr, vr, True, 0, q_block, kv_block)
+    o = o.reshape(b, kv_heads * g, s, a.head_dim).transpose(0, 2, 1, 3)
+    o = _from_virtual(o, a.n_kv_heads, kk, a.n_heads_per_expert)
+
+    o_sel = o.reshape(b * s * kk, a.d_head_group)
+    y = _routed_o(params, o_sel, dec, a, bk, ctx, x.dtype)
+    return y.reshape(b, s, d), _aux(dec)
+
+
+def moa_prefill(params, x, positions, a: MoAArgs, *, cache: dict,
+                ctx: ctx_lib.MeshContext | None = None,
+                mask: jax.Array | None = None,
+                start_pos: int | None = None):
+    """Prefill: routed attention that also fills the shared KV cache.
+
+    Mirrors ``attention.prefill_attention`` — full caches take K/V at
+    positions [0, S); ``start_pos`` (static int) is chunked-prefill mode:
+    K/V land at [start_pos, start_pos + S) and attention resumes against
+    the cached prefix.  ``mask`` ([B·S]) keeps bucketed/chunk padding out
+    of routing.  Returns (y, new_cache) — prefill drops the aux like the
+    FFN path does."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    bk = backend_lib.resolve(a)
+    dec = _route(params, flat, a, bk, train=False, rng=None, mask=mask)
+    kk = dec.plan.expert_index.shape[1]
+
+    q_sel = _routed_q(params, flat, dec, a, bk, ctx)
+    q_sel = q_sel.reshape(b, s, kk * a.n_heads_per_expert, a.head_dim)
+    q = _norm_rope_q(params, q_sel, positions, a)
+    q = _to_virtual(q.reshape(b, s, kk, a.n_heads_per_expert, a.head_dim),
+                    a.n_kv_heads)
+    k, v = _shared_kv(params, x, positions, a)
+
+    kc = k.astype(cache["k"].dtype)
+    vc = v.astype(cache["v"].dtype)
+    off = 0 if start_pos is None else int(start_pos)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, off, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, off, axis=1)
+    if off:
+        k = jnp.concatenate(
+            [jax.lax.slice_in_dim(cache["k"], 0, off, axis=1)
+             .astype(k.dtype), k], axis=1)
+        v = jnp.concatenate(
+            [jax.lax.slice_in_dim(cache["v"], 0, off, axis=1)
+             .astype(v.dtype), v], axis=1)
+    o = attn_lib.blockwise_attention(
+        q, k, v, causal=True, window=0, q_block=_block(a.q_block, s),
+        kv_block=_block(a.kv_block, k.shape[1]), q_offset=off)
+    o = _from_virtual(o, a.n_kv_heads, kk, a.n_heads_per_expert)
+
+    o_sel = o.reshape(b * s * kk, a.d_head_group)
+    y = _routed_o(params, o_sel, dec, a, bk, ctx, x.dtype)
+    return y.reshape(b, s, d), {"k": new_k, "v": new_v}
+
+
+def moa_decode(params, x, cache: dict, cur_index, a: MoAArgs, *,
+               ctx: ctx_lib.MeshContext | None = None,
+               mask: jax.Array | None = None):
+    """One-token routed decode. x: [B, 1, d]; cur_index: scalar or [B]
+    per-slot positions.  ``mask`` ([B]) is slot occupancy — dead slots
+    route nowhere and consume no head-group capacity.  Returns
+    (y [B, 1, d], new_cache, aux) with per-step routing telemetry."""
+    b = x.shape[0]
+    cur = jnp.broadcast_to(
+        jnp.asarray(cur_index, jnp.int32).reshape(-1), (b,))
+    positions = cur[:, None]                                # [B, 1]
+    bk = backend_lib.resolve(a)
+    flat = x.reshape(b, x.shape[-1])
+    dec = _route(params, flat, a, bk, train=False, rng=None, mask=mask)
+    kk = dec.plan.expert_index.shape[1]
+
+    q_sel = _routed_q(params, flat, dec, a, bk, ctx)        # [B·k, Hg·hd]
+    q_sel = q_sel.reshape(b, 1, kk * a.n_heads_per_expert, a.head_dim)
+    q = _norm_rope_q(params, q_sel, positions, a)
+    q = _to_virtual(q.reshape(b, 1, kk, a.n_heads_per_expert, a.head_dim),
+                    a.n_kv_heads)
+    k_new, v_new = _shared_kv(params, x, positions, a)
+
+    length = cache["k"].shape[1]
+    # One-hot blend cache write (same rationale as decode_attention: no
+    # dynamic_update_slice on the sharded sequence axis).
+    hit = (jnp.arange(length)[None, :] == cur[:, None])[..., None, None]
+    k = jnp.where(hit, k_new.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
+
+    kv_heads = a.n_kv_heads
+    hd = a.head_dim
+    g = q.shape[2] // kv_heads
+    qr = q.reshape(b, 1, kv_heads, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    valid_kv = jnp.arange(length)[None, :] <= cur[:, None]  # [B, S]
+    s = jnp.where(valid_kv[:, None, None, None, :], s, attn_lib.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, kv_heads * g, hd).astype(x.dtype)
+    o = _from_virtual(o, a.n_kv_heads, kk, a.n_heads_per_expert)
+
+    o_sel = o.reshape(b * kk, a.d_head_group)
+    y = _routed_o(params, o_sel, dec, a, bk, ctx, x.dtype)
+    return y.reshape(b, 1, x.shape[-1]), {"k": k, "v": v}, _aux(dec)

@@ -137,6 +137,10 @@ class KernelBackend:
     dispatch: Callable       # (x, plan, a, *, ctx=None)   -> [E, C, d]
     combine: Callable        # (buf, plan, a, *, dtype=None, ctx=None) -> [T,d]
     topk_impl: Callable | None = None
+    # Single grouped matmul over capacity buffers: (x [E,C,K], w [E,K,N],
+    # a, *, ctx=None) -> [E,C,N].  The MoA layer's routed Q/O projections
+    # use this directly (one projection each, no FFN activation between).
+    gmm: Callable | None = None
 
 
 _REGISTRY: dict[str, "KernelBackend | Exception"] = {}
@@ -247,9 +251,17 @@ def _ref_combine(buf, p, a, *, dtype=None, ctx=None):
         return dsp.combine(buf, p, dtype=dtype)
 
 
+def _ref_gmm(x, w, a, *, ctx=None):
+    with trace_lib.current().span("kernel.gmm", backend="ref",
+                                  shape=tuple(x.shape)):
+        return jnp.einsum(
+            "eck,ekn->ecn", x, w.astype(x.dtype),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+
+
 register(KernelBackend(name="ref", expert_ffn=_ref_expert_ffn,
                        dispatch=_ref_dispatch, combine=_ref_combine,
-                       topk_impl=None))
+                       topk_impl=None, gmm=_ref_gmm))
 
 
 # ---------------------------------------------------------------------------
@@ -349,10 +361,21 @@ def _register_pallas() -> None:
         w, idx, vals = ops.topk_gating_full(noisy, k, extra=kk - k)
         return w, idx[:, :k], vals
 
+    def _pallas_gmm(x, w, a, *, ctx=None):
+        tiles = {}
+        if not getattr(a, "gmm_autotune", True):
+            from repro.kernels import gmm as gmm_lib
+            tiles = dict(bm=gmm_lib.DEFAULT_TILE, bn=gmm_lib.DEFAULT_TILE,
+                         bk=gmm_lib.DEFAULT_TILE)
+        with trace_lib.current().span("kernel.gmm", backend="pallas",
+                                      shape=tuple(x.shape)):
+            return ops.gmm(x, w.astype(x.dtype), activation="none",
+                           **tiles)
+
     register(KernelBackend(name="pallas", expert_ffn=_pallas_expert_ffn,
                            dispatch=_pallas_dispatch,
                            combine=_pallas_combine,
-                           topk_impl=_pallas_topk))
+                           topk_impl=_pallas_topk, gmm=_pallas_gmm))
 
 
 _register_pallas()

@@ -48,6 +48,9 @@ def main():
                     help="routing policy override (docs/routing.md)")
     ap.add_argument("--capacity-factor", type=float, default=None,
                     help="capacity-factor override (RouterSpec)")
+    ap.add_argument("--moa-k", type=int, default=None,
+                    help="MoA head-groups-per-token override (archs with "
+                         "moa_positions; docs/moa.md)")
     ap.add_argument("--no-dead-slot-mask", action="store_true",
                     help="let dead slots route through the MoE (pre-"
                          "router behavior; more capacity overflow)")
@@ -103,6 +106,13 @@ def main():
         router_lib.get_policy(spec.policy)
         cfg = cfg.replace(router=spec)
         print(f"[serve] router: {spec}")
+    if args.moa_k is not None:
+        if not cfg.moa_positions:
+            raise SystemExit(
+                f"--moa-k: arch {cfg.name!r} has no MoA layers "
+                "(moa_positions is empty)")
+        cfg = cfg.replace(moa_k=args.moa_k)
+        print(f"[serve] moa_k: {cfg.moa_k}/{cfg.moa_experts} head groups")
     params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
     if args.ckpt:
         mgr = CheckpointManager(args.ckpt)
@@ -175,10 +185,20 @@ def main():
               f"({engine.prefix.bytes / 1e6:.1f} MB, "
               f"{ps['evictions']} evictions)")
     if engine.telemetry:
-        load = np.sum([t["expert_load"] for t in engine.telemetry], axis=0)
-        over = engine.stats["overflow_total"]
-        print(f"[serve] expert load (decode): {load.astype(int).tolist()} "
-              f"(capacity overflow: {over:.0f})")
+        if any("expert_load" in t for t in engine.telemetry):
+            load = np.sum([t["expert_load"] for t in engine.telemetry
+                           if "expert_load" in t], axis=0)
+            over = engine.stats["overflow_total"]
+            print(f"[serve] expert load (decode): "
+                  f"{load.astype(int).tolist()} "
+                  f"(capacity overflow: {over:.0f})")
+        if any("moa_load" in t for t in engine.telemetry):
+            load = np.sum([t["moa_load"] for t in engine.telemetry
+                           if "moa_load" in t], axis=0)
+            over = engine.stats["moa_overflow_total"]
+            print(f"[serve] MoA head-group load (decode): "
+                  f"{load.astype(int).tolist()} "
+                  f"(capacity overflow: {over:.0f})")
     if args.trace:
         print(f"[serve] trace written: {args.trace} "
               f"({len(engine.tracer.events)} events; load in Perfetto)")

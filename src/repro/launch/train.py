@@ -38,6 +38,8 @@ def reduced(cfg):
         kw.update(d_ff=128)
     if cfg.n_experts:
         kw.update(n_experts=8, moe_k=2, moe_d_ff=64)
+    if cfg.moa_experts:
+        kw.update(moa_experts=4, moa_k=2, moa_heads_per_expert=2)
     if cfg.ssm_d_state:
         kw.update(ssm_d_state=4)
     if cfg.sliding_window:
@@ -82,6 +84,9 @@ def main():
                     help="train capacity-factor override (RouterSpec)")
     ap.add_argument("--eval-capacity-factor", type=float, default=None,
                     help="eval capacity-factor override (RouterSpec)")
+    ap.add_argument("--moa-k", type=int, default=None,
+                    help="MoA head-groups-per-token override (archs with "
+                         "moa_positions; docs/moa.md)")
     ap.add_argument("--workdir", default="/tmp/repro_train")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a chrome-trace JSON of the run here "
@@ -116,6 +121,13 @@ def main():
         router_lib.get_policy(spec.policy)   # unknown policy fails here
         cfg = cfg.replace(router=spec)
         print(f"[train] router: {spec}")
+    if args.moa_k is not None:
+        if not cfg.moa_positions:
+            raise SystemExit(
+                f"--moa-k: arch {cfg.name!r} has no MoA layers "
+                "(moa_positions is empty)")
+        cfg = cfg.replace(moa_k=args.moa_k)
+        print(f"[train] moa_k: {cfg.moa_k}/{cfg.moa_experts} head groups")
     params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
     print(f"[train] {cfg.name}: {pm.param_count(params)/1e6:.1f}M params "
           f"on {len(jax.devices())} device(s)")

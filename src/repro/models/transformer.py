@@ -18,6 +18,7 @@ from repro.common import param as pm
 from repro.common.param import ParamDef
 from repro.configs.base import LayerKind, ModelConfig, layer_kinds, n_periods
 from repro.core import hierarchical as hmoe
+from repro.core import moa as moa_lib
 from repro.core import moe as moe_lib
 from repro.models import attention, layers, ssm
 from repro.sharding import context as ctx_lib
@@ -52,12 +53,36 @@ def _hmoe_args(cfg: ModelConfig) -> hmoe.HMoEArgs:
         gmm_autotune=cfg.gmm_autotune, dtype=cfg.param_dtype)
 
 
+def _moa_args(cfg: ModelConfig) -> moa_lib.MoAArgs:
+    # The FFN RouterSpec is reused for MoA policy/capacity knobs unless
+    # moa_router overrides it — but its k is the FFN's k, so strip it and
+    # let resolve_spec re-inherit from MoAArgs.k (= cfg.moa_k).
+    router = cfg.moa_router
+    if router is None and cfg.router is not None:
+        router = cfg.router.replace(k=None)
+    return moa_lib.MoAArgs(
+        n_experts=cfg.moa_experts, k=cfg.moa_k, d_model=cfg.d_model,
+        n_heads_per_expert=cfg.moa_heads_per_expert, head_dim=cfg.head_dim,
+        n_kv_heads=max(cfg.n_kv_heads, 1), qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta,
+        router=router,
+        capacity_factor=cfg.capacity_factor,
+        w_importance=cfg.w_importance, w_load=cfg.w_load,
+        kernel_backend=cfg.kernel_backend, dispatch_impl=cfg.dispatch_impl,
+        dispatch_vmem_limit=cfg.dispatch_vmem_limit,
+        dispatch_e_block=cfg.dispatch_e_block,
+        gmm_autotune=cfg.gmm_autotune,
+        q_block=cfg.q_block, kv_block=cfg.kv_block, dtype=cfg.param_dtype)
+
+
 def block_defs(cfg: ModelConfig, kind: LayerKind) -> dict:
     defs: dict = {"ln1": layers.rmsnorm_defs(cfg.d_model)}
     if kind.mixer in ("attn", "attn_local"):
         defs["attn"] = attention.attention_defs(
             cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
             qk_norm=cfg.qk_norm, dtype=cfg.param_dtype)
+    elif kind.mixer == "moa":
+        defs["moa"] = moa_lib.moa_defs(_moa_args(cfg))
     else:
         defs["mamba"] = ssm.mamba_defs(
             cfg.d_model, d_state=cfg.ssm_d_state, d_conv=cfg.ssm_d_conv,
@@ -87,10 +112,56 @@ def _zero_aux():
 
 
 def _add_aux(acc, aux):
+    # aux["n"] is the number of routed sublayers the entry sums over — a
+    # block with an MoA mixer *and* an MoE FFN contributes 2 (metrics are
+    # averaged over n_moe in lm_loss, so the count must match the sums).
     return {"aux_loss": acc["aux_loss"] + aux["aux_loss"],
             "metrics": {k: acc["metrics"][k] + aux["metrics"][k]
                         for k in _ZERO_METRICS},
-            "n_moe": acc["n_moe"] + 1.0}
+            "n_moe": acc["n_moe"] + aux.get("n", 1.0)}
+
+
+def _merge_aux(a, b):
+    """Merge the mixer's and the FFN's per-layer aux (either may be None).
+    Telemetry dicts merge by key — MoA entries use moa_load/moa_overflow,
+    MoE entries expert_load/overflow, so both survive side by side."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    out = {"aux_loss": a["aux_loss"] + b["aux_loss"],
+           "metrics": {k: a["metrics"][k] + b["metrics"][k]
+                       for k in _ZERO_METRICS},
+           "n": a.get("n", 1.0) + b.get("n", 1.0)}
+    ta = a.get("telemetry") or {}
+    tb = b.get("telemetry") or {}
+    if ta or tb:
+        out["telemetry"] = {**ta, **tb}
+    return out
+
+
+def _moa_aux(aux):
+    """Adapt an MoA layer's router aux: rename the telemetry counters so
+    head-group load is never summed into FFN-expert load (the vectors can
+    even differ in length)."""
+    t = aux.get("telemetry")
+    out = {"aux_loss": aux["aux_loss"], "metrics": aux["metrics"],
+           "n": 1.0}
+    if t is not None:
+        out["telemetry"] = {"moa_load": t["expert_load"],
+                            "moa_overflow": t["overflow"]}
+    return out
+
+
+def _flat_mask(valid, b, s):
+    """[B] or [B, S] validity -> flat [B·S] float routing mask (None
+    passes through)."""
+    if valid is None:
+        return None
+    return jnp.broadcast_to(
+        jnp.asarray(valid, jnp.float32).reshape(
+            (b, -1) if jnp.ndim(valid) > 1 else (b, 1)),
+        (b, s)).reshape(b * s)
 
 
 # ---------------------------------------------------------------------------
@@ -110,13 +181,26 @@ def telemetry_width(cfg: ModelConfig) -> int:
     return cfg.n_experts
 
 
+def moa_telemetry_width(cfg: ModelConfig) -> int:
+    """Length of the per-head-group telemetry vectors (0 = no MoA mixer)."""
+    if not any(k.mixer == "moa" for k in layer_kinds(cfg)):
+        return 0
+    return cfg.moa_experts
+
+
 def _telemetry_zero(cfg: ModelConfig):
+    t = {}
     n = telemetry_width(cfg)
-    if n == 0:
-        return None
-    return {"expert_load": jnp.zeros((n,), jnp.float32),
-            "overflow": jnp.zeros((n,), jnp.float32),
-            "n_moe": jnp.zeros((), jnp.float32)}
+    if n:
+        t.update(expert_load=jnp.zeros((n,), jnp.float32),
+                 overflow=jnp.zeros((n,), jnp.float32),
+                 n_moe=jnp.zeros((), jnp.float32))
+    m = moa_telemetry_width(cfg)
+    if m:
+        t.update(moa_load=jnp.zeros((m,), jnp.float32),
+                 moa_overflow=jnp.zeros((m,), jnp.float32),
+                 n_moa=jnp.zeros((), jnp.float32))
+    return t or None
 
 
 def _add_telemetry(acc, aux):
@@ -125,9 +209,16 @@ def _add_telemetry(acc, aux):
     t = aux.get("telemetry")
     if t is None:
         return acc
-    return {"expert_load": acc["expert_load"] + t["expert_load"],
-            "overflow": acc["overflow"] + t["overflow"],
-            "n_moe": acc["n_moe"] + 1.0}
+    out = dict(acc)
+    if "expert_load" in t and "expert_load" in acc:
+        out["expert_load"] = acc["expert_load"] + t["expert_load"]
+        out["overflow"] = acc["overflow"] + t["overflow"]
+        out["n_moe"] = acc["n_moe"] + 1.0
+    if "moa_load" in t and "moa_load" in acc:
+        out["moa_load"] = acc["moa_load"] + t["moa_load"]
+        out["moa_overflow"] = acc["moa_overflow"] + t["moa_overflow"]
+        out["n_moa"] = acc["n_moa"] + 1.0
+    return out
 
 
 def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
@@ -145,12 +236,7 @@ def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
     if kind.ffn in ("moe", "moe+dense"):
         b, s, d = h.shape
         flat = h.reshape(b * s, d)
-        mask = None
-        if valid is not None:
-            mask = jnp.broadcast_to(
-                jnp.asarray(valid, jnp.float32).reshape(
-                    (b, -1) if jnp.ndim(valid) > 1 else (b, 1)),
-                (b, s)).reshape(b * s)
+        mask = _flat_mask(valid, b, s)
         if cfg.moe_hierarchical:
             y, aux = hmoe.hmoe_apply(params["moe"], flat, _hmoe_args(cfg),
                                      train=train, rng=rng, ctx=ctx,
@@ -170,6 +256,7 @@ def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
                 ctx: ctx_lib.MeshContext | None = None):
     """Train/prefill block. Returns (x, aux)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    aux_mix = None
     if kind.mixer in ("attn", "attn_local"):
         window = cfg.sliding_window if kind.mixer == "attn_local" else 0
         y = attention.attention(params["attn"], h, positions,
@@ -177,11 +264,19 @@ def block_apply(params, x, kind: LayerKind, cfg: ModelConfig, *,
                                 qk_norm=cfg.qk_norm, window=window,
                                 q_block=cfg.q_block, kv_block=cfg.kv_block,
                                 pad_heads=cfg.pad_attn_heads, ctx=ctx)
+    elif kind.mixer == "moa":
+        # Fold the rng so head-group routing noise decorrelates from the
+        # FFN router's noise in the same block.
+        sub = jax.random.fold_in(rng, 1) if rng is not None else None
+        y, a_moa = moa_lib.moa_apply(params["moa"], h, _moa_args(cfg),
+                                     positions=positions, train=train,
+                                     rng=sub, ctx=ctx)
+        aux_mix = _moa_aux(a_moa)
     else:
         y = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state, ctx=ctx)
     x = x + y
     x, aux = _apply_ffn(params, x, kind, cfg, train=train, rng=rng, ctx=ctx)
-    return x, aux
+    return x, _merge_aux(aux_mix, aux)
 
 
 def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
@@ -201,6 +296,11 @@ def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
             params["attn"], h, positions, rope_theta=cfg.rope_theta,
             qk_norm=cfg.qk_norm, cache=cache, window=window,
             q_block=cfg.q_block, kv_block=cfg.kv_block, offset=start_pos)
+    elif kind.mixer == "moa":
+        b, s, _ = h.shape
+        y, new_cache = moa_lib.moa_prefill(
+            params["moa"], h, positions, _moa_args(cfg), cache=cache,
+            ctx=ctx, mask=_flat_mask(valid, b, s), start_pos=start_pos)
     else:
         assert start_pos is None, \
             "chunked prefill requires attention mixers (ssm/hybrid state " \
@@ -221,18 +321,26 @@ def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
     slot occupancy — dead slots route nowhere and consume no capacity.
     Returns (x, new_cache, aux)."""
     h = layers.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    aux_mix = None
     if kind.mixer in ("attn", "attn_local"):
         window = cfg.sliding_window if kind.mixer == "attn_local" else 0
         y, new_cache = attention.decode_attention(
             params["attn"], h, cache, cur_index,
             rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm, window=window)
+    elif kind.mixer == "moa":
+        mask = (None if valid is None
+                else jnp.asarray(valid, jnp.float32).reshape(-1))
+        y, new_cache, a_moa = moa_lib.moa_decode(
+            params["moa"], h, cache, cur_index, _moa_args(cfg), ctx=ctx,
+            mask=mask)
+        aux_mix = _moa_aux(a_moa)
     else:
         y, new_cache = ssm.mamba_decode(params["mamba"], h, cache,
                                         d_state=cfg.ssm_d_state)
     x = x + y
     x, aux = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx,
                         valid=valid)
-    return x, new_cache, aux
+    return x, new_cache, _merge_aux(aux_mix, aux)
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +417,11 @@ def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
             return attention.init_cache_defs(
                 batch, max_len, cfg.n_kv_heads, cfg.head_dim, window=window,
                 dtype=cfg.param_dtype)
+        if kind.mixer == "moa":
+            # Shared-K/V invariant: an MoA layer's cache is a plain
+            # attention cache (pages/prefix reuse work unchanged).
+            return moa_lib.init_cache_defs(batch, max_len, _moa_args(cfg),
+                                           dtype=cfg.param_dtype)
         return ssm.init_state_defs(batch, cfg.d_model,
                                    d_state=cfg.ssm_d_state,
                                    d_conv=cfg.ssm_d_conv,

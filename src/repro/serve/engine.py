@@ -339,6 +339,13 @@ class ServeEngine:
         self._h_active = self.metrics.histogram("decode_active_slots")
         self._c_expert_load = self.metrics.counter("decode_expert_load",
                                                    labels=("expert",))
+        # MoA (routed attention head groups, docs/moa.md): separate
+        # instrument families — head-group load is not FFN-expert load.
+        self._c_moa_overflow = self.metrics.counter("moa_overflow_total")
+        self._h_moa_overflow = self.metrics.histogram(
+            "decode_moa_overflow_per_step")
+        self._c_moa_load = self.metrics.counter("decode_moa_load",
+                                                labels=("expert",))
 
     def submit(self, prompt, max_new_tokens: int, arrival: int = 0
                ) -> Request:
@@ -699,17 +706,28 @@ class ServeEngine:
     def _record_telemetry(self, telem, n_active: int) -> None:
         if telem is None:
             return
-        entry = {"step": self.step_count, "active": n_active,
-                 "expert_load": np.asarray(telem["expert_load"]),
-                 "overflow": np.asarray(telem["overflow"]),
-                 "n_moe": float(telem["n_moe"])}
+        entry = {"step": self.step_count, "active": n_active}
         # Aggregate instruments cover the whole run in bounded memory;
         # the raw entry lands in the keep_last_n ring for inspection.
-        self._c["overflow_total"].inc(float(entry["overflow"].sum()))
-        self._h_overflow.observe(float(entry["overflow"].sum()))
+        # MoE FFN counters and MoA head-group counters are independent
+        # families — a model may have either or both.
+        if "expert_load" in telem:
+            entry.update(expert_load=np.asarray(telem["expert_load"]),
+                         overflow=np.asarray(telem["overflow"]),
+                         n_moe=float(telem["n_moe"]))
+            self._c["overflow_total"].inc(float(entry["overflow"].sum()))
+            self._h_overflow.observe(float(entry["overflow"].sum()))
+            for e, load in enumerate(entry["expert_load"].tolist()):
+                self._c_expert_load.child(expert=e).inc(float(load))
+        if "moa_load" in telem:
+            entry.update(moa_load=np.asarray(telem["moa_load"]),
+                         moa_overflow=np.asarray(telem["moa_overflow"]),
+                         n_moa=float(telem["n_moa"]))
+            self._c_moa_overflow.inc(float(entry["moa_overflow"].sum()))
+            self._h_moa_overflow.observe(float(entry["moa_overflow"].sum()))
+            for e, load in enumerate(entry["moa_load"].tolist()):
+                self._c_moa_load.child(expert=e).inc(float(load))
         self._h_active.observe(n_active)
-        for e, load in enumerate(entry["expert_load"].tolist()):
-            self._c_expert_load.child(expert=e).inc(float(load))
         self._telemetry.append(entry)
 
     @property

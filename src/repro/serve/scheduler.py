@@ -36,6 +36,7 @@ All of this is host-side bookkeeping over numpy/python state; device work
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -133,13 +134,27 @@ def chunk_rounds(by_slot: dict) -> list:
 
 
 class RequestQueue:
-    """FIFO queue with arrival times (for replaying staggered traffic)."""
+    """FIFO queue with arrival times (for replaying staggered traffic).
+
+    Indexed two-heap layout (the replay-sim bottleneck under sustained
+    overload was the old linear scan over *every* queued request per
+    pop): not-yet-arrived requests wait in an arrival-keyed ``_pending``
+    heap and are admitted to the submission-ordered ``_ready`` heap the
+    first time ``pop_ready`` sees their arrival step.  The common fcfs
+    pop is then O(log n) off the ready head, and a ``fits`` scan only
+    walks requests that are actually poppable this step — never the
+    backlog of future arrivals.  ``pop_ready`` semantics are
+    bit-identical to the linear scan (pinned by tests/test_serve_sched.py):
+    earliest-*submitted* ready request wins, not earliest-arrived."""
 
     def __init__(self):
-        self._q: list[Request] = []
+        self._seq = 0                    # submission order (FIFO tiebreak)
+        self._pending: list = []         # heap of (arrival, seq, req)
+        self._ready: list = []           # heap of (seq, req)
 
     def push(self, req: Request) -> None:
-        self._q.append(req)
+        heapq.heappush(self._pending, (req.arrival, self._seq, req))
+        self._seq += 1
 
     def pop_ready(self, step: int, fits=None) -> Request | None:
         """Earliest-submitted request whose arrival step has passed.
@@ -153,16 +168,28 @@ class RequestQueue:
         Without ``fits`` (fcfs) the head is popped regardless — it
         claims its slot even when no budget is left for its chunks this
         step."""
-        for i, req in enumerate(self._q):
+        while self._pending and self._pending[0][0] <= step:
+            _, seq, req = heapq.heappop(self._pending)
+            heapq.heappush(self._ready, (seq, req))
+        skipped = []
+        found = None
+        while self._ready:
+            seq, req = heapq.heappop(self._ready)
+            # Re-check arrival: a caller may legally probe an *earlier*
+            # step than the one that admitted this request to ready.
             if req.arrival <= step and (fits is None or fits(req)):
-                return self._q.pop(i)
-        return None
+                found = req
+                break
+            skipped.append((seq, req))
+        for item in skipped:
+            heapq.heappush(self._ready, item)
+        return found
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._pending) + len(self._ready)
 
     def __bool__(self) -> bool:
-        return bool(self._q)
+        return bool(self._pending) or bool(self._ready)
 
 
 class Scheduler:

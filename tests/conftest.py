@@ -55,6 +55,8 @@ def small_config(name: str, **overrides):
         kw.update(d_ff=96)
     if cfg.n_experts:
         kw.update(n_experts=4, moe_k=2, moe_d_ff=32)
+    if getattr(cfg, "moa_experts", 0):
+        kw.update(moa_experts=4, moa_k=2, moa_heads_per_expert=2)
     if cfg.ssm_d_state:
         kw.update(ssm_d_state=4)
     if cfg.sliding_window:
