@@ -7,7 +7,16 @@ export PYTHONPATH := src:.
 .PHONY: test-tier1 test-slow test-all test-kernels test-serve \
 	test-routing test-moa test-obs bench-micro bench-serve \
 	bench-serve-prefix bench-replay trace-serve fit-costs replay \
-	tune-kernels
+	tune-kernels lint
+
+# Hard-error lint gate (the CI job's first step): rules pinned in
+# pyproject.toml [tool.ruff.lint].  ruff is not vendored — CI installs
+# it; locally `pip install ruff` once.
+lint:
+	@command -v ruff >/dev/null 2>&1 || \
+		{ echo "ruff not found: pip install ruff (CI installs it)"; \
+		  exit 1; }
+	ruff check src tests benchmarks
 
 # Tier-1: everything except slow/tpu (the conftest default selection).
 test-tier1:

@@ -136,6 +136,39 @@ def run():
              f"[{T},{D}]<->[{E},{cap},{D}] e_block={eblk} "
              f"({E // eblk} slabs)")
 
+    # --- fused single-launch decode step --------------------------------
+    # (docs/kernels.md §Fused decode step: decode-shaped calls — a
+    # handful of slot tokens — are where per-launch overhead dominates;
+    # the fused kernel collapses the >=4 unfused launches (top-k,
+    # dispatch, 2x GMM, combine) into one.  Interpret-mode wall times on
+    # CPU price the host-side dispatch trend, not MXU throughput; the
+    # launch-count collapse itself is pinned in test_fused_decode.py.)
+    tB = 8
+    xB = jax.random.normal(jax.random.PRNGKey(3), (tB, D))
+    occ = jnp.ones((tB,))
+    for fused in (False, True):
+        aF = MoEArgs(n_experts=E, k=K, d_model=D, d_ff=FF,
+                     dtype=jnp.float32, kernel_backend="pallas",
+                     fused_decode=fused)
+        fn = jax.jit(lambda pr, xv, m, _a=aF: moe_apply(
+            pr, xv, _a, train=False, mask=m)[0])
+        us = time_call(fn, params, xB, occ, reduce="best")
+        tag = "fused" if fused else "unfused"
+        emit(f"fused_decode_{tag}_pallas", us,
+             f"T={tB} E={E} k={K} launches={'1' if fused else '>=5'}")
+    # plan-mode variant (routing outside the kernel — the expert_choice
+    # and MoA shape): one scatter+FFN+combine launch on a ready plan.
+    capB = dsp.capacity_for(tB, E, K, 2.0)
+    infoB = g(params["gate"], xB)
+    pB = dsp.plan(infoB.expert_index, infoB.combine_weights, E, capB)
+    from repro.kernels import ops as kops_fd
+    ra = jax.jit(lambda xv: kops_fd.fused_routed_apply(
+        xv, pB, pB, params["w1"].astype(jnp.float32),
+        params["w2"].astype(jnp.float32), mode="ffn", activation="relu"))
+    us = time_call(ra, xB, reduce="best")
+    emit("fused_decode_routed_apply_pallas", us,
+         f"T={tB} E={E} cap={capB} plan-mode launches=1")
+
     # --- GMM tiling autotune --------------------------------------------
     # (Static 128 tiles vs the measured table — `make tune-kernels` — on
     # the expert-FFN projection shapes.  plan_blocks resolves the tuned

@@ -194,6 +194,29 @@ def run() -> None:
              f"step_p95_ms={c['step_p95_ms']:.1f};"
              f"speedup={c['tok_s'] / s['tok_s']:.2f}x")
 
+    # --- fused single-launch decode step ---------------------------------
+    # (docs/kernels.md §Fused decode step: the pallas backend runs each
+    # MoE decode layer as ONE kernel launch instead of >=5; greedy
+    # streams must be bit-identical.  A decode-heavy mix — short prompts,
+    # long generations — maximizes the share of wall time the fused step
+    # covers.  Interpret-mode pallas on CPU hosts: the row tracks the
+    # host-side trend; the launch collapse is the accelerator win.)
+    fused_cfg = cfg.replace(kernel_backend="pallas")
+    decode_mix = [(rng.randint(1, cfg.vocab_size, (8,)).astype(np.int32),
+                   24, i // ARRIVALS_PER_STEP) for i in range(N_REQUESTS)]
+    fres = {}
+    for tag, fused in (("off", False), ("on", True)):
+        eng = ServeEngine(params, fused_cfg, ServeConfig(
+            max_len=64, n_slots=N_SLOTS, fused_decode=fused))
+        fres[tag] = _best_of(eng, decode_mix)
+    foff, fon = fres["off"], fres["on"]
+    emit("serve_fused_decode", fon["wall_s"] * 1e6,
+         f"tok_s={fon['tok_s']:.1f};tok_s_unfused={foff['tok_s']:.1f};"
+         f"steps={fon['decode_steps']};"
+         f"step_p95_ms={fon['step_p95_ms']:.1f};"
+         f"speedup={fon['tok_s'] / foff['tok_s']:.2f}x;"
+         f"bit_identical={fon['out_tokens'] == foff['out_tokens']}")
+
     # --- dead-slot routing mask under partial occupancy ------------------
     # Tight capacity (1 slot/expert) + sparse arrivals keep most of an
     # 8-slot pool empty: with the router's occupancy mask dead slots stop

@@ -110,6 +110,11 @@ class ModelConfig:
     # Consult the measured GMM tiling table (make tune-kernels); False
     # pins the static 128-tile defaults.
     gmm_autotune: bool = True
+    # Serve-time fused decode step (docs/kernels.md §Fused decode step):
+    # decode-shaped MoE/MoA calls run routing + dispatch + expert FFN +
+    # combine as ONE kernel launch per layer.  Inference-only — train and
+    # prefill paths ignore it; greedy outputs are bit-identical on/off.
+    fused_decode: bool = False
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -52,7 +52,9 @@ def _local_moe(params, x_local, mask_local, a: MoEArgs, *, train, rng,
     derive per-shard block specs."""
     ep_rank = jax.lax.axis_index(ep_axis)
     t_local, d = x_local.shape
-    assert a.n_experts % ep == 0, (a.n_experts, ep)
+    if a.n_experts % ep != 0:
+        raise ValueError(
+            f"n_experts={a.n_experts} must divide over ep={ep} shards")
     e_local = a.n_experts // ep
 
     # Per-shard rng so noise differs across shards.
@@ -153,11 +155,14 @@ def moe_apply_ep(params, x, a: MoEArgs, mesh: Mesh | None = None, *,
     axes).
     """
     if ctx is not None and ctx.mesh is not None:
-        assert not ctx.manual_axes, \
-            "moe_apply_ep opens its own shard_map; it cannot run inside " \
-            "a Manual-mode context"
+        if ctx.manual_axes:
+            raise RuntimeError(
+                "moe_apply_ep opens its own shard_map; it cannot run "
+                "inside a Manual-mode context")
         mesh = ctx.mesh
-    assert mesh is not None, "moe_apply_ep needs a mesh (ctx or positional)"
+    if mesh is None:
+        raise RuntimeError(
+            "moe_apply_ep needs a mesh (ctx or positional)")
     bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
     router = router_lib.build(a, topk_impl=bk.topk_impl)
     # Context for the shard_map body: every mesh axis is Manual on 0.4.x,

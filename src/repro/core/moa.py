@@ -100,6 +100,11 @@ class MoAArgs:
     dispatch_vmem_limit: int | None = None
     dispatch_e_block: int | None = None
     gmm_autotune: bool = True
+    # Serve-time fused decode (docs/kernels.md §Fused decode step): each
+    # routed Q/O projection runs dispatch -> grouped matmul -> combine as
+    # one kernel launch (``decode_proj`` on the backend).  Inference-only;
+    # set by the model layer for decode-shaped calls only.
+    fused_decode: bool = False
     # --- attention blocking -----------------------------------------------
     q_block: int = 512
     kv_block: int = 512
@@ -365,7 +370,18 @@ def moa_decode(params, x, cache: dict, cur_index, a: MoAArgs, *,
     dec = _route(params, flat, a, bk, train=False, rng=None, mask=mask)
     kk = dec.plan.expert_index.shape[1]
 
-    q_sel = _routed_q(params, flat, dec, a, bk, ctx)        # [B·k, Hg·hd]
+    # Fused decode: each routed projection (dispatch -> gmm -> combine)
+    # collapses to one kernel launch via the backend's ``decode_proj``;
+    # MoA's assignment-major [T·k, 1] plan view runs through the same op
+    # (docs/kernels.md §Fused decode step).  Bit-identical to the
+    # _routed_q/_routed_o pipeline.
+    fused = a.fused_decode and bk.decode_proj is not None
+    ap = assignment_plan(dec.plan) if fused else None
+    if fused:
+        q_sel = bk.decode_proj(flat, params["wq"], dec.plan, ap, a,
+                               dtype=flat.dtype, ctx=ctx)
+    else:
+        q_sel = _routed_q(params, flat, dec, a, bk, ctx)    # [B·k, Hg·hd]
     q_sel = q_sel.reshape(b, 1, kk * a.n_heads_per_expert, a.head_dim)
     q = _norm_rope_q(params, q_sel, positions, a)
     q = _to_virtual(q.reshape(b, 1, kk, a.n_heads_per_expert, a.head_dim),
@@ -394,5 +410,9 @@ def moa_decode(params, x, cache: dict, cur_index, a: MoAArgs, *,
     o = _from_virtual(o, a.n_kv_heads, kk, a.n_heads_per_expert)
 
     o_sel = o.reshape(b * kk, a.d_head_group)
-    y = _routed_o(params, o_sel, dec, a, bk, ctx, x.dtype)
+    if fused:
+        y = bk.decode_proj(o_sel, params["wo"], ap, dec.plan, a,
+                           dtype=x.dtype, ctx=ctx)
+    else:
+        y = _routed_o(params, o_sel, dec, a, bk, ctx, x.dtype)
     return y.reshape(b, 1, x.shape[-1]), {"k": k, "v": v}, _aux(dec)

@@ -93,6 +93,12 @@ class MoEArgs:
     # autotune, seeded by `make tune-kernels`) when planning expert-FFN
     # blocks; False pins the static 128-tile defaults.
     gmm_autotune: bool = True
+    # Serve-time fused decode: run routing + dispatch + expert FFN +
+    # combine as ONE kernel launch (docs/kernels.md §Fused decode step).
+    # Inference-only — ignored under train=True; the backend falls back
+    # (RuntimeWarning) to the unfused pipeline past the VMEM slab budget.
+    # Set by the model layer for decode-shaped calls only.
+    fused_decode: bool = False
     sigmoid_output: bool = False        # paper's LM passes MoE out thru sigmoid
     wide_dispatch: bool = True          # §3.1 combined-batch token resharding
     dtype: Any = jnp.bfloat16
@@ -158,6 +164,22 @@ def moe_apply(params, x: jax.Array, a: MoEArgs, *, train: bool = True,
     consume no expert capacity."""
     t, d = x.shape
     bk = backend_lib.resolve(a)     # explicit: raises on unknown/broken
+    if not train and a.fused_decode and bk.decode_step is not None:
+        # One-launch decode step: the backend fuses routing -> scatter ->
+        # expert FFN -> combine (bit-identical to the pipeline below) and
+        # emits the same load/overflow telemetry families.  Decode
+        # consumers discard losses/metrics, so aux carries zeros.
+        token_axis = "tokens" if a.wide_dispatch else "batch"
+        y, telemetry = bk.decode_step(params, x, a, mask=mask, ctx=ctx)
+        y = ctx_lib.with_constraint(y, (token_axis, "embed"), ctx)
+        if a.sigmoid_output:
+            y = jax.nn.sigmoid(y.astype(jnp.float32)).astype(x.dtype)
+        zero = jnp.zeros((), jnp.float32)
+        return y, {"aux_loss": zero,
+                   "metrics": {k: zero for k in
+                               ("cv_importance", "cv_load",
+                                "max_over_mean_load", "fraction_dropped")},
+                   "telemetry": telemetry}
     router = router_lib.build(a, topk_impl=bk.topk_impl)
     dec = router.route(params, x, train=train, rng=rng, mask=mask)
 

@@ -141,6 +141,16 @@ class KernelBackend:
     # a, *, ctx=None) -> [E,C,N].  The MoA layer's routed Q/O projections
     # use this directly (one projection each, no FFN activation between).
     gmm: Callable | None = None
+    # One-launch serve decode step (inference-only; docs/kernels.md §Fused
+    # decode step): (params, x [T,d], a, *, mask=None, ctx=None) ->
+    # (y [T,d], telemetry dict with expert_load/overflow [E]).  The fused
+    # kernel emits the same counter families route_telemetry does, so the
+    # serve telemetry path is unchanged fused vs unfused.
+    decode_step: Callable | None = None
+    # One-launch routed projection over explicit plans (MoA decode):
+    # (x, w [E,K,N], plan_in, plan_out, a, *, dtype=None, ctx=None) ->
+    # [T_out, N] — fuses dispatch(plan_in) -> gmm -> combine(plan_out).
+    decode_proj: Callable | None = None
 
 
 _REGISTRY: dict[str, "KernelBackend | Exception"] = {}
@@ -212,6 +222,49 @@ def _dispatch_impl(a) -> str:
 
 
 # ---------------------------------------------------------------------------
+# unfused decode-step composition (the ref decode_step, and the pallas
+# backend's loud fallback when the fused slab exceeds the VMEM budget)
+# ---------------------------------------------------------------------------
+
+def _decode_step_via(bk: "KernelBackend", params, x, a, *, mask=None,
+                     ctx=None):
+    """Route -> dispatch -> expert FFN -> combine through ``bk``'s ops, in
+    exactly ``moe_apply``'s order and constraint placement — the unfused
+    semantics the fused kernel must be bit-identical to."""
+    from repro.core import router as router_lib
+    router = router_lib.build(a, topk_impl=bk.topk_impl)
+    dec = router.route(params, x, train=False, rng=None, mask=mask)
+    token_axis = "tokens" if getattr(a, "wide_dispatch", True) else "batch"
+    x = ctx_lib.with_constraint(x, (token_axis, "embed"), ctx)
+    buf = bk.dispatch(x, dec, a, ctx=ctx)
+    buf = ctx_lib.with_constraint(
+        buf, ("experts", "expert_capacity", "embed"), ctx)
+    out = bk.expert_ffn(params, buf, a, ctx=ctx)
+    out = ctx_lib.with_constraint(
+        out, ("experts", "expert_capacity", "embed"), ctx)
+    y = bk.combine(out, dec, a, dtype=x.dtype, ctx=ctx)
+    return y, dec.telemetry
+
+
+def _decode_proj_via(bk: "KernelBackend", x, w, plan_in, plan_out, a, *,
+                     dtype=None, ctx=None):
+    """dispatch(plan_in) -> gmm -> combine(plan_out) through ``bk``'s ops —
+    the MoA routed-projection sequence (core/moa.py ``_routed_q``/
+    ``_routed_o``); d_model-shaped buffers get the expert-view constraint
+    exactly where those helpers place it."""
+    d_model = getattr(a, "d_model", None)
+    buf = bk.dispatch(x, plan_in, a, ctx=ctx)
+    if buf.shape[-1] == d_model:
+        buf = ctx_lib.with_constraint(
+            buf, ("experts", "expert_capacity", "embed"), ctx)
+    out = bk.gmm(buf, w, a, ctx=ctx)
+    if out.shape[-1] == d_model:
+        out = ctx_lib.with_constraint(
+            out, ("experts", "expert_capacity", "embed"), ctx)
+    return bk.combine(out, plan_out, a, dtype=dtype, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
 # "ref" — the pure jnp/XLA reference path
 # ---------------------------------------------------------------------------
 
@@ -259,9 +312,25 @@ def _ref_gmm(x, w, a, *, ctx=None):
             preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def _ref_decode_step(params, x, a, *, mask=None, ctx=None):
+    with trace_lib.current().span("kernel.decode_step", backend="ref",
+                                  tokens=int(x.shape[0])):
+        return _decode_step_via(get("ref"), params, x, a, mask=mask,
+                                ctx=ctx)
+
+
+def _ref_decode_proj(x, w, plan_in, plan_out, a, *, dtype=None, ctx=None):
+    with trace_lib.current().span("kernel.decode_proj", backend="ref",
+                                  tokens=int(x.shape[0])):
+        return _decode_proj_via(get("ref"), x, w, plan_in, plan_out, a,
+                                dtype=dtype, ctx=ctx)
+
+
 register(KernelBackend(name="ref", expert_ffn=_ref_expert_ffn,
                        dispatch=_ref_dispatch, combine=_ref_combine,
-                       topk_impl=None, gmm=_ref_gmm))
+                       topk_impl=None, gmm=_ref_gmm,
+                       decode_step=_ref_decode_step,
+                       decode_proj=_ref_decode_proj))
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +430,88 @@ def _register_pallas() -> None:
         w, idx, vals = ops.topk_gating_full(noisy, k, extra=kk - k)
         return w, idx[:, :k], vals
 
+    def _fused_budget_ok(a, need: int, what: str) -> bool:
+        """Guard the fused decode slab against the VMEM budget.  Everything
+        (weights included) is resident for the single grid step, so past
+        the limit we warn *loudly* (RuntimeWarning — same contract as the
+        dispatch VMEM fallback) and run the unfused pallas pipeline."""
+        limit = (getattr(a, "dispatch_vmem_limit", None)
+                 or dispatch_lib.DEFAULT_VMEM_LIMIT)
+        if need <= limit:
+            return True
+        import warnings
+        warnings.warn(
+            f"pallas {what}: fused slab needs ~{need / 1e6:.1f} MB VMEM "
+            f"> limit {limit / 1e6:.1f} MB; falling back to the unfused "
+            "kernel pipeline for this call (docs/kernels.md §Fused decode "
+            "step)", RuntimeWarning, stacklevel=3)
+        return False
+
+    def _pallas_decode_step(params, x, a, *, mask=None, ctx=None):
+        from repro.core import router as router_lib
+        from repro.kernels import fused_decode as fused_lib
+        spec = router_lib.resolve_spec(a)
+        t, d = x.shape
+        e = a.n_experts
+        k = min(spec.k, e)
+        capacity = spec.capacity(t, e, train=False)
+        gated = a.activation == "swiglu"
+        wdt = params["w1"].dtype
+        with trace_lib.current().span("kernel.decode_step",
+                                      backend="pallas", tokens=int(t)):
+            if spec.policy == "noisy_topk" and not spec.priority_dispatch:
+                # Full fusion: eval routing is the deterministic clean-
+                # logit top-k, computed in-kernel alongside everything
+                # else; telemetry comes back as kernel outputs.
+                need = fused_lib.decode_vmem_bytes(
+                    t, d, a.d_ff, e, capacity, x.dtype, wdt, gated=gated)
+                if not _fused_budget_ok(a, need, "decode_step"):
+                    return _decode_step_via(get("pallas"), params, x, a,
+                                            mask=mask, ctx=ctx)
+                valid = (jnp.ones((t,), jnp.float32) if mask is None
+                         else jnp.asarray(mask, jnp.float32).reshape(-1))
+                y, load, overflow = ops.fused_decode_step(
+                    x, valid, params["gate"]["wg"], params["w1"],
+                    params["w2"], params.get("w3") if gated else None,
+                    k=k, capacity=capacity, activation=a.activation)
+                return y, {"expert_load": load, "overflow": overflow}
+            # Any other policy (expert_choice's batch-global column top-k,
+            # Appendix-F batchwise/threshold, priority dispatch): routing
+            # runs outside as plain XLA ops — still zero extra kernel
+            # launches — and the plan-mode kernel fuses the rest.
+            router = router_lib.build(a, topk_impl=None)
+            dec = router.route(params, x, train=False, rng=None, mask=mask)
+            p = _as_plan(dec)
+            need = fused_lib.routed_vmem_bytes(
+                t, d, d, a.d_ff, e, p.capacity, x.dtype, wdt,
+                mode="ffn", gated=gated)
+            if not _fused_budget_ok(a, need, "decode_step"):
+                return _decode_step_via(get("pallas"), params, x, a,
+                                        mask=mask, ctx=ctx)
+            y = ops.fused_routed_apply(
+                x, p, p, params["w1"], params["w2"],
+                params.get("w3") if gated else None,
+                mode="ffn", activation=a.activation, out_dtype=x.dtype)
+            return y, dec.telemetry
+
+    def _pallas_decode_proj(x, w, plan_in, plan_out, a, *, dtype=None,
+                            ctx=None):
+        from repro.kernels import fused_decode as fused_lib
+        p_in = _as_plan(plan_in)
+        p_out = _as_plan(plan_out)
+        with trace_lib.current().span("kernel.decode_proj",
+                                      backend="pallas",
+                                      tokens=int(x.shape[0])):
+            need = fused_lib.routed_vmem_bytes(
+                x.shape[0], x.shape[-1], w.shape[-1], 0, p_in.n_experts,
+                p_in.capacity, x.dtype, w.dtype, mode="proj")
+            if not _fused_budget_ok(a, need, "decode_proj"):
+                return _decode_proj_via(get("pallas"), x, w, p_in, p_out,
+                                        a, dtype=dtype, ctx=ctx)
+            return ops.fused_routed_apply(
+                x, p_in, p_out, w, mode="proj",
+                out_dtype=dtype or x.dtype)
+
     def _pallas_gmm(x, w, a, *, ctx=None):
         tiles = {}
         if not getattr(a, "gmm_autotune", True):
@@ -375,7 +526,9 @@ def _register_pallas() -> None:
     register(KernelBackend(name="pallas", expert_ffn=_pallas_expert_ffn,
                            dispatch=_pallas_dispatch,
                            combine=_pallas_combine,
-                           topk_impl=_pallas_topk, gmm=_pallas_gmm))
+                           topk_impl=_pallas_topk, gmm=_pallas_gmm,
+                           decode_step=_pallas_decode_step,
+                           decode_proj=_pallas_decode_proj))
 
 
 _register_pallas()

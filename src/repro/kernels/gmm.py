@@ -96,8 +96,15 @@ def load_tunings(path: str | None = None) -> dict:
     Keys beginning with ``_`` are metadata (tuner provenance) and are
     skipped.  Cached per path; call :func:`invalidate_tunings` after
     re-tuning or pointing ``REPRO_GMM_TUNINGS`` elsewhere mid-process.
+
+    When ``REPRO_GMM_TUNINGS`` supplies the path, the override is
+    *validated*: a missing or unparseable file raises
+    ``KernelBackendError`` instead of silently falling back to the static
+    defaults (an empty value keeps the documented "unset" meaning — the
+    committed table).
     """
     global _tunings_cache
+    env_override = path is None and bool(os.environ.get(TUNINGS_ENV))
     path = path or tunings_path()
     if _tunings_cache is not None and _tunings_cache[0] == path:
         return _tunings_cache[1]
@@ -108,7 +115,19 @@ def load_tunings(path: str | None = None) -> dict:
         table = {key: tuple(int(v) for v in val)
                  for key, val in raw.items() if not key.startswith("_")}
     except FileNotFoundError:
-        pass
+        if env_override:
+            from repro.kernels.backend import KernelBackendError
+            raise KernelBackendError(
+                f"{TUNINGS_ENV}={path!r} points at a missing GMM tunings "
+                "file — fix the path or unset the variable (an empty "
+                "value means 'use the committed table')") from None
+    except (json.JSONDecodeError, ValueError, TypeError) as err:
+        if env_override:
+            from repro.kernels.backend import KernelBackendError
+            raise KernelBackendError(
+                f"{TUNINGS_ENV}={path!r} is not a valid GMM tunings "
+                f"table: {err}") from err
+        raise
     _tunings_cache = (path, table)
     return table
 

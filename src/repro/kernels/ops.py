@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch as dispatch_lib
+from repro.kernels import fused_decode as fused_lib
 from repro.kernels import gmm as gmm_lib
 from repro.kernels import topk_gating as topk_lib
 
@@ -76,6 +77,30 @@ def dispatch(x, eidx, pos, *, n_experts: int, capacity: int,
     return dispatch_lib.dispatch(x, eidx, pos, n_experts=n_experts,
                                  capacity=capacity, interpret=_INTERPRET,
                                  vmem_limit=vmem_limit, e_block=e_block)
+
+
+def fused_decode_step(x, valid, wg, w1, w2, w3=None, *, k: int,
+                      capacity: int, activation: str = "relu"):
+    """One fused MoE decode step (routing + scatter + expert FFN +
+    combine in a single pallas launch).  Inference-only — no custom VJP;
+    see kernels/fused_decode.py.  Returns (y, expert_load, overflow)."""
+    return fused_lib.decode_step(x, valid, wg, w1, w2, w3, k=k,
+                                 capacity=capacity, activation=activation,
+                                 interpret=_INTERPRET)
+
+
+def fused_routed_apply(x, plan_in, plan_out, w1, w2=None, w3=None, *,
+                       mode: str = "ffn", activation: str = "relu",
+                       out_dtype=None):
+    """Fused dispatch -> grouped matmul(s) -> combine over explicit
+    ``DispatchPlan``s (any routing policy; MoA's assignment-major plan
+    views included).  Inference-only; see kernels/fused_decode.py."""
+    return fused_lib.routed_apply(
+        x, plan_in.expert_index, plan_in.position,
+        plan_out.expert_index, plan_out.position, plan_out.weight,
+        w1, w2, w3, n_experts=plan_in.n_experts,
+        capacity=plan_in.capacity, mode=mode, activation=activation,
+        out_dtype=out_dtype, interpret=_INTERPRET)
 
 
 def combine(buf, w, eidx, pos, *, out_dtype=None,

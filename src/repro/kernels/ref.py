@@ -33,6 +33,57 @@ def expert_ffn_ref(x: jax.Array, w1: jax.Array, w2: jax.Array,
     return out.astype(x.dtype)
 
 
+def fused_decode_ref(x: jax.Array, wg: jax.Array, w1: jax.Array,
+                     w2: jax.Array, w3: jax.Array | None = None,
+                     valid: jax.Array | None = None, *, k: int,
+                     capacity: int):
+    """Oracle for the fused decode step (kernels/fused_decode.py).
+
+    Deliberately written with the *other* formulations — ``lax.top_k``
+    routing, stable-argsort slot assignment (the ``core.dispatch.plan``
+    algorithm), einsum FFN, vectorized gather-combine — so it is an
+    independent check of the kernel's argmax-round / running-count /
+    fori-loop implementation.  Returns ``(y [T, d], expert_load [E],
+    overflow [E])``.
+    """
+    t, d = x.shape
+    e = wg.shape[-1]
+    logits = jnp.dot(x.astype(jnp.float32), wg.astype(jnp.float32))
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    if valid is not None:
+        w = w * valid.astype(jnp.float32).reshape(t, 1)
+
+    flat_e = idx.reshape(-1).astype(jnp.int32)
+    flat_w = w.reshape(-1)
+    assigned = flat_w > 0
+    key = flat_e * 2 + (~assigned).astype(jnp.int32)
+    order = jnp.argsort(key)                    # jnp.argsort is stable
+    sorted_e = flat_e[order]
+    sorted_w = flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    pos_sorted = jnp.where(sorted_w > 0, rank, capacity)
+    pos = jnp.zeros_like(flat_e).at[order].set(pos_sorted)
+    kept = pos < capacity
+    w_eff = jnp.where(kept, flat_w, 0.0)
+
+    xk = jnp.repeat(x, k, axis=0)
+    buf = jnp.zeros((e, capacity, d), x.dtype).at[flat_e, pos].set(
+        xk, mode="drop")
+    out = expert_ffn_ref(buf, w1, w2, w3)
+    gathered = out[flat_e, jnp.clip(pos, 0, capacity - 1)]
+    y = jnp.sum((w_eff[:, None] * gathered.astype(jnp.float32)
+                 ).reshape(t, k, d), axis=1).astype(x.dtype)
+
+    load = jnp.zeros((e,), jnp.float32).at[flat_e].add(
+        assigned.astype(jnp.float32))
+    overflow = jnp.zeros((e,), jnp.float32).at[flat_e].add(
+        (assigned & ~kept).astype(jnp.float32))
+    return y, load, overflow
+
+
 def topk_gating_ref(logits: jax.Array, k: int):
     """Softmax-over-top-k (Eq. 3/5, deterministic part).
 

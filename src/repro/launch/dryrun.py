@@ -1,4 +1,14 @@
 import os
+import sys
+if "jax" in sys.modules:
+    # The XLA_FLAGS write below is a silent no-op once jax has initialized
+    # its backends — the dry-run would then "succeed" against however many
+    # devices the caller happened to have instead of the 512-device pod.
+    raise RuntimeError(
+        "repro.launch.dryrun must be imported before jax: it forces "
+        "--xla_force_host_platform_device_count=512 via XLA_FLAGS at "
+        "import time, which jax only reads at first backend init. "
+        "Run it as a fresh process: python -m repro.launch.dryrun ...")
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512")
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.

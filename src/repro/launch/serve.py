@@ -81,6 +81,11 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="give every request the same N-token prompt "
                          "prefix (exercises --prefix-cache)")
+    ap.add_argument("--fused-decode", action="store_true",
+                    help="one fused kernel launch per MoE/MoA layer at "
+                         "decode (routing + dispatch + expert FFN + "
+                         "combine; bit-identical greedy outputs — "
+                         "docs/kernels.md §Fused decode step)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a chrome-trace JSON of the run here "
                          "(Perfetto-loadable; docs/observability.md)")
@@ -143,6 +148,7 @@ def main():
         admission=args.admission,
         prefix_cache=args.prefix_cache,
         prefix_cache_bytes=args.prefix_cache_bytes,
+        fused_decode=args.fused_decode,
         trace_path=args.trace,
         trace_sync=args.trace_sync,
         log_decisions=args.log_decisions), ctx=ctx)

@@ -113,8 +113,10 @@ def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
     g = h // kv_heads
     q_block = min(q_block, sq)
     kv_block = min(kv_block, skv)
-    assert sq % q_block == 0 and skv % kv_block == 0, (sq, q_block, skv,
-                                                       kv_block)
+    if sq % q_block != 0 or skv % kv_block != 0:
+        raise ValueError(
+            f"sequence lengths must divide the attention blocks: "
+            f"sq={sq} % q_block={q_block}, skv={skv} % kv_block={kv_block}")
     nq = sq // q_block
     nkv = skv // kv_block
     scale = 1.0 / (hd ** 0.5)
@@ -406,8 +408,9 @@ def prefill_attention(params, x, positions, *, rope_theta: float,
     length = cache["k"].shape[1]
     kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
     if offset is not None:
-        assert window == 0, \
-            "chunked prefill is unsupported for sliding-window layers"
+        if window != 0:
+            raise ValueError(
+                "chunked prefill is unsupported for sliding-window layers")
         off = int(offset)
         new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, off,
                                                     axis=1)

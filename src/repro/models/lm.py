@@ -66,7 +66,9 @@ def chunked_xent(params, x, labels, cfg: ModelConfig,
     """Mean cross-entropy without materializing [B, S, V]."""
     b, s, d = x.shape
     chunk = min(chunk, s)
-    assert s % chunk == 0
+    if s % chunk != 0:
+        raise ValueError(
+            f"sequence length {s} not divisible by loss chunk {chunk}")
     n = s // chunk
     xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)          # [n, B, c, d]
     lc = labels.reshape(b, n, chunk).swapaxes(0, 1)

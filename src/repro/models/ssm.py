@@ -105,7 +105,9 @@ def mamba(params, x: jax.Array, *, d_state: int, chunk: int = 128,
     d_in = u.shape[-1]
 
     chunk = min(chunk, s)
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk != 0:
+        raise ValueError(
+            f"sequence length {s} not divisible by ssm scan chunk {chunk}")
     n_chunks = s // chunk
     uc = u.reshape(b, n_chunks, chunk, d_in)
 

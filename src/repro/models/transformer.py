@@ -24,7 +24,9 @@ from repro.models import attention, layers, ssm
 from repro.sharding import context as ctx_lib
 
 
-def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
+def _moe_args(cfg: ModelConfig, *, decode: bool = False) -> moe_lib.MoEArgs:
+    # ``decode`` marks a decode-shaped call: only those opt in to the
+    # fused single-launch decode step (train/prefill stay unfused).
     return moe_lib.MoEArgs(
         n_experts=cfg.n_experts, k=cfg.moe_k, d_model=cfg.d_model,
         d_ff=cfg.moe_d_ff, activation=cfg.activation,
@@ -36,6 +38,7 @@ def _moe_args(cfg: ModelConfig) -> moe_lib.MoEArgs:
         dispatch_vmem_limit=cfg.dispatch_vmem_limit,
         dispatch_e_block=cfg.dispatch_e_block,
         gmm_autotune=cfg.gmm_autotune,
+        fused_decode=cfg.fused_decode and decode,
         wide_dispatch=cfg.moe_wide_dispatch, dtype=cfg.param_dtype)
 
 
@@ -53,7 +56,7 @@ def _hmoe_args(cfg: ModelConfig) -> hmoe.HMoEArgs:
         gmm_autotune=cfg.gmm_autotune, dtype=cfg.param_dtype)
 
 
-def _moa_args(cfg: ModelConfig) -> moa_lib.MoAArgs:
+def _moa_args(cfg: ModelConfig, *, decode: bool = False) -> moa_lib.MoAArgs:
     # The FFN RouterSpec is reused for MoA policy/capacity knobs unless
     # moa_router overrides it — but its k is the FFN's k, so strip it and
     # let resolve_spec re-inherit from MoAArgs.k (= cfg.moa_k).
@@ -72,6 +75,7 @@ def _moa_args(cfg: ModelConfig) -> moa_lib.MoAArgs:
         dispatch_vmem_limit=cfg.dispatch_vmem_limit,
         dispatch_e_block=cfg.dispatch_e_block,
         gmm_autotune=cfg.gmm_autotune,
+        fused_decode=cfg.fused_decode and decode,
         q_block=cfg.q_block, kv_block=cfg.kv_block, dtype=cfg.param_dtype)
 
 
@@ -222,7 +226,8 @@ def _add_telemetry(acc, aux):
 
 
 def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
-               ctx: ctx_lib.MeshContext | None = None, valid=None):
+               ctx: ctx_lib.MeshContext | None = None, valid=None,
+               decode: bool = False):
     """Post-mixer FFN with residual. x: [B, S, d].
 
     ``valid`` ([B] or [B, S] in {0,1}) is the router's token-validity
@@ -242,7 +247,8 @@ def _apply_ffn(params, x, kind: LayerKind, cfg: ModelConfig, *, train, rng,
                                      train=train, rng=rng, ctx=ctx,
                                      mask=mask)
         else:
-            y, aux = moe_lib.moe_apply(params["moe"], flat, _moe_args(cfg),
+            y, aux = moe_lib.moe_apply(params["moe"], flat,
+                                       _moe_args(cfg, decode=decode),
                                        train=train, rng=rng, ctx=ctx,
                                        mask=mask)
         out = out + y.reshape(b, s, d)
@@ -302,9 +308,10 @@ def block_prefill(params, x, kind: LayerKind, cfg: ModelConfig, cache,
             params["moa"], h, positions, _moa_args(cfg), cache=cache,
             ctx=ctx, mask=_flat_mask(valid, b, s), start_pos=start_pos)
     else:
-        assert start_pos is None, \
-            "chunked prefill requires attention mixers (ssm/hybrid state " \
-            "scans cannot resume mid-prompt from a cache page)"
+        if start_pos is not None:
+            raise ValueError(
+                "chunked prefill requires attention mixers (ssm/hybrid "
+                "state scans cannot resume mid-prompt from a cache page)")
         y, new_cache = ssm.mamba(params["mamba"], h, d_state=cfg.ssm_d_state,
                                  return_state=True, ctx=ctx)
     x = x + y
@@ -331,15 +338,15 @@ def block_decode(params, x, kind: LayerKind, cfg: ModelConfig, cache,
         mask = (None if valid is None
                 else jnp.asarray(valid, jnp.float32).reshape(-1))
         y, new_cache, a_moa = moa_lib.moa_decode(
-            params["moa"], h, cache, cur_index, _moa_args(cfg), ctx=ctx,
-            mask=mask)
+            params["moa"], h, cache, cur_index,
+            _moa_args(cfg, decode=True), ctx=ctx, mask=mask)
         aux_mix = _moa_aux(a_moa)
     else:
         y, new_cache = ssm.mamba_decode(params["mamba"], h, cache,
                                         d_state=cfg.ssm_d_state)
     x = x + y
     x, aux = _apply_ffn(params, x, kind, cfg, train=False, rng=None, ctx=ctx,
-                        valid=valid)
+                        valid=valid, decode=True)
     return x, new_cache, _merge_aux(aux_mix, aux)
 
 

@@ -169,11 +169,23 @@ class ServeConfig:
     # ``engine.metrics`` cover the full run, so a week-long serve no
     # longer grows an unbounded list).
     telemetry_keep_last_n: int = 512
+    # Fused single-launch MoE decode (docs/kernels.md §Fused decode
+    # step): each MoE/MoA layer's decode hot path runs routing + scatter
+    # + expert FFN + combine as ONE kernel launch.  Greedy outputs are
+    # bit-identical on/off (pinned by the serve parity matrix); the
+    # backend falls back per call (RuntimeWarning) when the fused slab
+    # exceeds the VMEM budget.  Decode-only — prefill stays unfused.
+    fused_decode: bool = False
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, sc: ServeConfig,
                  ctx: ctx_lib.MeshContext | None = None):
+        if sc.fused_decode:
+            # Flows to decode-shaped MoE/MoA calls only (the model layer
+            # gates on decode=True); the jitted closures below capture
+            # this local cfg, so flip it before they are built.
+            cfg = cfg.replace(fused_decode=True)
         self.params = params
         self.cfg = cfg
         self.sc = sc

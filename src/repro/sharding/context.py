@@ -220,7 +220,8 @@ class MeshContext:
     def resolve(self, shape, logical_axes, fallbacks: list | None = None
                 ) -> P:
         """Logical axes -> PartitionSpec (manual axes stripped)."""
-        assert self.mesh is not None, "resolve() needs a concrete mesh"
+        if self.mesh is None:
+            raise RuntimeError("resolve() needs a concrete mesh")
         spec = partition.resolve_spec(self.rules, self.mesh, shape,
                                       logical_axes, fallbacks)
         return _strip(spec, self.manual_axes)

@@ -60,7 +60,10 @@ def pipeline_block_defs(cfg: ModelConfig, n_stages: int) -> dict:
     Only homogeneous (period=1) stacks are pipelined here; patterned archs
     would stage at period granularity (not needed for the hillclimb cells).
     """
-    assert cfg.period == 1, "pipeline stages require homogeneous layers"
+    if cfg.period != 1:
+        raise ValueError(
+            f"pipeline stages require homogeneous layers (period=1), got "
+            f"period={cfg.period}")
     per, total = stages_for(cfg, n_stages)
     kind = layer_kinds(cfg)[0]
     one = transformer.block_defs(cfg, kind)
@@ -206,7 +209,9 @@ def pipeline_lm_loss(params, batch, cfg: ModelConfig, *, mesh,
     """
     tokens, labels = batch["tokens"], batch["labels"]
     b, s = tokens.shape
-    assert b % n_micro == 0
+    if b % n_micro != 0:
+        raise ValueError(
+            f"batch size {b} not divisible into {n_micro} microbatches")
     x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
     x_mb = x.reshape(n_micro, b // n_micro, s, -1)
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b // n_micro, s))

@@ -56,7 +56,9 @@ class TrainLoopConfig:
 def _split_microbatches(batch: dict, n: int) -> dict:
     def reshape(x):
         b = x.shape[0]
-        assert b % n == 0, (b, n)
+        if b % n != 0:
+            raise ValueError(
+                f"batch size {b} not divisible into {n} microbatches")
         return x.reshape((n, b // n) + x.shape[1:])
     return jax.tree_util.tree_map(reshape, batch)
 

@@ -1,0 +1,250 @@
+"""Guard hardening: shape/config checks that used to be ``assert``
+statements are now typed exceptions, so they survive ``python -O``
+(which strips asserts — the old guards silently vanished in optimized
+deployments).  The whole battery runs in one ``python -O`` subprocess.
+
+Also here: the REPRO_GMM_TUNINGS override validation (a typo'd path must
+raise, not silently fall back to the static tile defaults) and the
+dryrun launchers' jax-already-imported guard (their XLA_FLAGS mutation
+is a silent no-op once jax has initialized a backend).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_optimized(body: str) -> str:
+    """Run ``body`` under ``python -O`` with the repo on PYTHONPATH."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-O", "-c",
+                          textwrap.dedent(body)], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_promoted_guards_survive_python_O():
+    """Every promoted guard still fires with asserts stripped.  The
+    script may not use ``assert`` itself — failures are collected and
+    re-raised explicitly."""
+    out = _run_optimized("""
+        import functools
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P
+
+        failures = []
+
+        def expect(exc, frag, fn):
+            try:
+                fn()
+            except exc as e:
+                if frag not in str(e):
+                    failures.append(f"{frag!r} not in {e!r}")
+            except Exception as e:  # wrong type
+                failures.append(f"wanted {exc.__name__} ({frag!r}), "
+                                f"got {type(e).__name__}: {e}")
+            else:
+                failures.append(f"no raise for {frag!r}")
+
+        # train/trainer.py: microbatch divisibility
+        from repro.train import trainer
+        expect(ValueError, "not divisible",
+               lambda: trainer._split_microbatches(
+                   {"x": jnp.zeros((5, 2))}, 2))
+
+        # train/pipeline.py: homogeneous-period + microbatch guards
+        from repro.configs.base import get_config
+        from repro.train import pipeline
+        cfg = get_config("smollm-135m")
+        expect(ValueError, "period",
+               lambda: pipeline.pipeline_block_defs(
+                   cfg.replace(period=2), 2))
+        expect(ValueError, "not divisible",
+               lambda: pipeline.pipeline_lm_loss(
+                   {}, {"tokens": jnp.zeros((5, 4), jnp.int32),
+                        "labels": jnp.zeros((5, 4), jnp.int32)},
+                   cfg, mesh=None, n_stages=2, n_micro=2))
+
+        # models/attention.py: block divisibility + window-chunk refusal
+        from repro.common import param as pm
+        from repro.models import attention
+        q = jnp.zeros((1, 6, 2, 4))
+        kv = jnp.zeros((1, 6, 1, 4))
+        expect(ValueError, "attention blocks",
+               lambda: attention.blockwise_attention(
+                   q, kv, kv, q_block=4, kv_block=3))
+        ap = pm.materialize(
+            attention.attention_defs(8, 2, 1, 4, qk_norm=False,
+                                     dtype=jnp.float32),
+            jax.random.PRNGKey(0))
+        cache = {"k": jnp.zeros((1, 16, 1, 4)),
+                 "v": jnp.zeros((1, 16, 1, 4))}
+        expect(ValueError, "sliding-window",
+               lambda: attention.prefill_attention(
+                   ap, jnp.zeros((1, 4, 8)),
+                   jnp.zeros((1, 4), jnp.int32), rope_theta=1e4,
+                   qk_norm=False, cache=cache, window=8, offset=0))
+
+        # models/lm.py: loss-chunk divisibility
+        from repro.models import lm
+        expect(ValueError, "loss chunk",
+               lambda: lm.chunked_xent({}, jnp.zeros((1, 5, 4)),
+                                       jnp.zeros((1, 5), jnp.int32),
+                                       cfg, chunk=2))
+
+        # models/ssm.py: scan-chunk divisibility
+        from repro.models import ssm
+        sp = pm.materialize(
+            ssm.mamba_defs(8, d_state=4, d_conv=4, expand=2,
+                           dtype=jnp.float32), jax.random.PRNGKey(0))
+        expect(ValueError, "scan chunk",
+               lambda: ssm.mamba(sp, jnp.zeros((1, 5, 8)), d_state=4,
+                                 chunk=2))
+
+        # models/transformer.py: ssm blocks refuse chunked prefill
+        from repro.configs.base import layer_kinds
+        from repro.models import transformer
+        mcfg = get_config("falcon-mamba-7b").replace(
+            n_layers=2, d_model=8, vocab_size=64, ssm_d_state=4,
+            param_dtype=jnp.float32, compute_dtype=jnp.float32)
+        kind = layer_kinds(mcfg)[0]
+        bp = pm.materialize(transformer.block_defs(mcfg, kind),
+                            jax.random.PRNGKey(0))
+        expect(ValueError, "attention mixers",
+               lambda: transformer.block_prefill(
+                   bp, jnp.zeros((1, 4, 8)), kind, mcfg, None,
+                   jnp.zeros((1, 4), jnp.int32), start_pos=16))
+
+        # core/expert_parallel.py: mesh/context/divisibility guards
+        from repro.core import expert_parallel as ep_lib
+        from repro.core.moe import MoEArgs
+        from repro.sharding import context as ctx_lib
+        expect(RuntimeError, "needs a mesh",
+               lambda: ep_lib.moe_apply_ep({}, None, None))
+        mesh = ctx_lib.make_mesh((1,), ("model",))
+        manual = ctx_lib.MeshContext.for_mesh(mesh).manual("model")
+        expect(RuntimeError, "Manual-mode",
+               lambda: ep_lib.moe_apply_ep({}, None, None, ctx=manual))
+        a = MoEArgs(n_experts=4, k=2, d_model=8, d_ff=16,
+                    dtype=jnp.float32)
+        body = functools.partial(ep_lib._local_moe, a=a, train=False,
+                                 rng=None, ep_axis="model",
+                                 fsdp_axis=None, ep=3, bk=None,
+                                 router=None, body_ctx=None)
+        expect(ValueError, "must divide",
+               lambda: ctx_lib.shard_map(
+                   lambda x: body({}, x, None), mesh,
+                   (P(),), (P(), P()))(jnp.zeros((4, 8))))
+
+        # sharding/context.py: resolve() without a concrete mesh
+        from repro.sharding import partition
+        bare = ctx_lib.MeshContext(mesh=None,
+                                   rules=partition.PLANS["dp_tp_ep"])
+        expect(RuntimeError, "concrete mesh",
+               lambda: bare.resolve((4, 4), ("batch", "embed")))
+
+        if failures:
+            raise SystemExit("GUARDS FAILED:\\n" + "\\n".join(failures))
+        print("GUARDS_OK")
+    """)
+    assert "GUARDS_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# REPRO_GMM_TUNINGS override validation (kernels/gmm.py)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def fresh_tunings(monkeypatch):
+    from repro.kernels import gmm
+    gmm.invalidate_tunings()
+    yield monkeypatch
+    monkeypatch.delenv(gmm.TUNINGS_ENV, raising=False)
+    gmm.invalidate_tunings()
+
+
+def test_gmm_tunings_env_missing_file_raises(fresh_tunings):
+    from repro.kernels import gmm
+    from repro.kernels.backend import KernelBackendError
+    fresh_tunings.setenv(gmm.TUNINGS_ENV, "/nonexistent/tunings.json")
+    with pytest.raises(KernelBackendError, match="missing GMM tunings"):
+        gmm.load_tunings()
+
+
+def test_gmm_tunings_env_invalid_table_raises(fresh_tunings, tmp_path):
+    from repro.kernels import gmm
+    from repro.kernels.backend import KernelBackendError
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    fresh_tunings.setenv(gmm.TUNINGS_ENV, str(bad))
+    with pytest.raises(KernelBackendError, match="not a valid"):
+        gmm.load_tunings()
+    gmm.invalidate_tunings()
+    wrong_shape = tmp_path / "wrong.json"
+    wrong_shape.write_text(json.dumps({"4x8x8x8x float32": "not-a-tile"}))
+    fresh_tunings.setenv(gmm.TUNINGS_ENV, str(wrong_shape))
+    with pytest.raises(KernelBackendError, match="not a valid"):
+        gmm.load_tunings()
+
+
+def test_gmm_tunings_env_empty_means_unset(fresh_tunings):
+    from repro.kernels import gmm
+    fresh_tunings.setenv(gmm.TUNINGS_ENV, "")
+    table = gmm.load_tunings()          # committed table, no raise
+    assert isinstance(table, dict)
+
+
+def test_gmm_tunings_explicit_path_keeps_lenient_default(fresh_tunings):
+    """Only the env override is validated: an explicit missing path keeps
+    the documented 'missing file -> {}' behavior (fresh checkouts tune
+    lazily)."""
+    from repro.kernels import gmm
+    assert gmm.load_tunings("/nonexistent/tunings.json") == {}
+
+
+def test_gmm_tunings_valid_override_roundtrips(fresh_tunings, tmp_path):
+    from repro.kernels import gmm
+    good = tmp_path / "good.json"
+    key = gmm.tuning_key(4, 128, 128, 128, "float32")
+    good.write_text(json.dumps({key: [64, 64, 64],
+                                "_meta": "tuner provenance"}))
+    fresh_tunings.setenv(gmm.TUNINGS_ENV, str(good))
+    assert gmm.load_tunings()[key] == (64, 64, 64)
+
+
+# ---------------------------------------------------------------------------
+# dryrun launchers: XLA_FLAGS mutation must precede any jax import
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("module", ["repro.launch.dryrun",
+                                    "repro.launch.dryrun_pp"])
+def test_dryrun_import_after_jax_fails_loudly(module):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         f"import jax\nimport {module}\n"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode != 0
+    assert "RuntimeError" in out.stderr
+    assert "imported before jax" in out.stderr
+
+
+@pytest.mark.parametrize("module", ["repro.launch.dryrun",
+                                    "repro.launch.dryrun_pp"])
+def test_dryrun_import_fresh_process_ok(module):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         f"import os\nimport {module}\n"
+         "print('512' in os.environ['XLA_FLAGS'])"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "True" in out.stdout

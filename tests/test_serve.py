@@ -547,6 +547,152 @@ def test_serve_parity_matrix_8device():
     assert "MATRIX8_OK" in out
 
 
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("policy", ["noisy_topk", "expert_choice"])
+def test_serve_parity_matrix_fused(policy, backend):
+    """Fused-decode on/off parity across the serving matrix: one kernel
+    launch per MoE layer must not change a single greedy token relative
+    to both the unfused engine and sequential generation.  (conftest
+    auto-marks the pallas cells slow, like the base matrix.)"""
+    cfg = _matrix_cfg(policy, backend)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    rs = np.random.RandomState(2)
+    specs = [(rs.randint(1, cfg.vocab_size, (l,)).astype(np.int32), m, a)
+             for l, m, a in MATRIX_TRACE]
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=3,
+                                               fused_decode=True))
+    reqs = [eng.submit(p, m, arrival=a) for p, m, a in specs]
+    eng.run()
+    assert all(r.done for r in reqs)
+
+    base = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=3))
+    rb = [base.submit(p, m, arrival=a) for p, m, a in specs]
+    base.run()
+    for req, b in zip(reqs, rb):
+        assert req.tokens == b.tokens, \
+            (policy, backend, req.rid, b.tokens, req.tokens)
+    # telemetry families unchanged: same per-step keys and totals
+    assert len(eng.telemetry) == len(base.telemetry)
+    for fe, be in zip(eng.telemetry, base.telemetry):
+        assert set(fe) == set(be)
+        assert fe["expert_load"].sum() == be["expert_load"].sum()
+
+    oracle = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=1,
+                                                  fused_decode=True))
+    for req, (p, m, _) in zip(reqs, specs):
+        oracle.reset()
+        ref = oracle.submit(p, m)
+        oracle.run()
+        assert ref.tokens == req.tokens, \
+            (policy, backend, req.rid, ref.tokens, req.tokens)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_serve_parity_matrix_fused_moa(backend):
+    """MoA engines route the assignment-major [T*k, 1] plan views through
+    the same fused decode_proj op: greedy parity with the unfused engine,
+    MoA telemetry intact."""
+    cfg = get_config("moa-demo").replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+        vocab_size=64, moa_experts=4, moa_k=2, moa_heads_per_expert=2,
+        n_experts=4, moe_k=2, moe_d_ff=32, param_dtype=jnp.float32,
+        compute_dtype=jnp.float32, q_block=16, kv_block=16,
+        capacity_factor=2.0, kernel_backend=backend)
+    params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+    rs = np.random.RandomState(2)
+    specs = [(rs.randint(1, cfg.vocab_size, (l,)).astype(np.int32), m, a)
+             for l, m, a in [(8, 4, 0), (12, 3, 0), (8, 5, 1)]]
+    outs = {}
+    for fused in (False, True):
+        eng = ServeEngine(params, cfg, ServeConfig(max_len=32, n_slots=2,
+                                                   fused_decode=fused))
+        reqs = [eng.submit(p, m, arrival=a) for p, m, a in specs]
+        eng.run()
+        assert all(r.done for r in reqs)
+        assert any("moa_load" in entry for entry in eng.telemetry)
+        outs[fused] = [r.tokens for r in reqs]
+    assert outs[True] == outs[False]
+
+
+def test_serve_parity_matrix_fused_8device():
+    """Fused on/off parity on a (data=2, model=4) fake mesh: the fused
+    op runs under the decode plan's sharding constraints and greedy
+    outputs stay bit-identical to the unfused engine on the mesh."""
+    out = _run("""
+        from repro.common import param as pm
+        from repro.configs.base import get_config
+        from repro.core.router import RouterSpec
+        from repro.models import lm
+        from repro.serve.engine import ServeConfig, ServeEngine
+        from repro.sharding import context
+
+        mesh = context.make_mesh((2, 4), ("data", "model"))
+        for policy in ("noisy_topk", "expert_choice"):
+            cfg = get_config("kimi-k2-1t-a32b").replace(
+                n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                head_dim=16, vocab_size=64, n_experts=4, moe_k=2,
+                moe_d_ff=32, param_dtype=jnp.float32,
+                compute_dtype=jnp.float32, q_block=16, kv_block=16,
+                router=RouterSpec(policy=policy, capacity_factor=2.0))
+            params = pm.materialize(lm.lm_defs(cfg), jax.random.PRNGKey(0))
+            ctx = context.MeshContext.for_mesh(mesh, "decode_std")
+            rs = np.random.RandomState(1)
+            specs = [(rs.randint(1, 64, (l,)), m, a)
+                     for l, m, a in [(8, 4, 0), (16, 3, 1), (8, 4, 2)]]
+            outs = {}
+            for fused in (False, True):
+                eng = ServeEngine(params, cfg, ServeConfig(
+                    max_len=64, n_slots=4, fused_decode=fused), ctx=ctx)
+                reqs = [eng.submit(p, m, arrival=a) for p, m, a in specs]
+                eng.run()
+                assert all(r.done for r in reqs)
+                outs[fused] = [r.tokens for r in reqs]
+            assert outs[True] == outs[False], policy
+        print("FUSED8_OK")
+    """)
+    assert "FUSED8_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# slot reuse: per-slot kv.lengths / position pinning across retire->readmit
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_repins_kv_lengths(moe_setup):
+    """_step_body pins ``kv.lengths[slot]`` to the fed token's write
+    position every decode step; a slot recycled from a retired request
+    must restart from the *new* request's prompt length, never inherit
+    the old occupant's cache length."""
+    cfg, params = moe_setup
+    eng = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=1))
+    rs = np.random.RandomState(9)
+    prompts = [rs.randint(1, cfg.vocab_size, (8,)).astype(np.int32),
+               rs.randint(1, cfg.vocab_size, (12,)).astype(np.int32)]
+    r0 = eng.submit(prompts[0], 4)
+    r1 = eng.submit(prompts[1], 5)
+    served = []
+    while eng.queue or eng.sched.active():
+        eng.step()
+        for slot, req in eng.sched.decoding():
+            assert slot == 0
+            # the next decode feeds req.tokens[-1] at position
+            # prompt_len + len(tokens) - 1; the cache is valid exactly
+            # that far (prefill wrote [0, prompt_len), each decode step
+            # appended one)
+            assert eng.kv.lengths[slot] \
+                == req.prompt_len + len(req.tokens) - 1, \
+                (req.rid, len(req.tokens), int(eng.kv.lengths[slot]))
+            served.append(req.rid)
+    assert r0.done and r1.done
+    assert {r0.rid, r1.rid} <= set(served)      # slot 0 served both
+    assert r1.admitted_step >= r0.finished_step  # genuine reuse
+    assert eng.kv.lengths[0] == 0                # released at the end
+    # the readmitted request's stream is bit-identical to a fresh engine
+    fresh = ServeEngine(params, cfg, ServeConfig(max_len=64, n_slots=1))
+    ref = fresh.submit(prompts[1], 5)
+    fresh.run()
+    assert ref.tokens == r1.tokens
+
+
 def test_dense_model_has_no_telemetry():
     cfg = get_config("smollm-135m").replace(
         n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
